@@ -1,0 +1,85 @@
+"""Paper Table I — accuracy parity: DPIFrame must not change the math.
+
+Short-trains each CTR model on synthetic Criteo/Avazu, then evaluates
+AUC/LogLoss with the naive executor and the full DPIFrame executor on a
+held-out stream. The paper reports identity to ≥4 decimals; on one backend
+our two paths are bit-identical, so we assert exact equality of scores and
+report the metrics.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ctr_spec
+from repro.core import DualParallelExecutor
+from repro.data.synthetic import AVAZU, CRITEO, synthetic_batch
+from repro.models.ctr import CTR_MODELS
+from repro.training.metrics import logloss, roc_auc
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+from .common import emit
+
+MAX_FIELD = 50_000
+
+
+def _short_train(model, params, schema, steps=60, batch=512):
+    cfg = AdamWConfig(lr=3e-3)
+    state = adamw_init(params, cfg)
+
+    @jax.jit
+    def step_fn(state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(state.params, batch)
+        state, m = adamw_update(state, grads, cfg)
+        return state, loss
+
+    for s in range(steps):
+        state, loss = step_fn(state, synthetic_batch(schema, s, batch))
+    return state.params
+
+
+def run(quick: bool = False) -> dict:
+    results = {}
+    datasets = [("criteo", CRITEO)] if quick else [("avazu", AVAZU),
+                                                   ("criteo", CRITEO)]
+    models = ["dcn"] if quick else list(CTR_MODELS)
+    for ds_name, schema in datasets:
+        schema = schema.scaled(MAX_FIELD)
+        val = synthetic_batch(schema, 10_000, 4096)
+        for model_name in models:
+            spec = ctr_spec(model_name, ds_name, 16, 128,
+                            max_field=MAX_FIELD)
+            model = CTR_MODELS[model_name](spec)
+            params = model.init(jax.random.PRNGKey(0))
+            params = _short_train(model, params, schema,
+                                  steps=20 if quick else 60)
+            scores = {}
+            for level in ("naive", "dual"):
+                ex = DualParallelExecutor(model.build_graph, level=level)
+                step = ex.build(params)
+                logits = np.asarray(step({"ids": val["ids"]})).reshape(-1)
+                scores[level] = 1.0 / (1.0 + np.exp(-logits))
+            # eager vs whole-graph are different XLA programs, so exact bit
+            # equality is backend fusion-order luck; the paper's Table-I
+            # claim is metric identity to >=4 (in fact 6) decimals.
+            np.testing.assert_allclose(scores["naive"], scores["dual"],
+                                       rtol=1e-5, atol=1e-6)
+            labels = np.asarray(val["labels"])
+            metrics = {}
+            for level, sc in scores.items():
+                metrics[level] = (roc_auc(labels, sc), logloss(labels, sc))
+            d_auc = abs(metrics["naive"][0] - metrics["dual"][0])
+            d_ll = abs(metrics["naive"][1] - metrics["dual"][1])
+            assert d_auc < 1e-6 and d_ll < 1e-6, (d_auc, d_ll)
+            auc, ll = metrics["dual"]
+            emit(f"parity/{model_name}_{ds_name}", 0.0,
+                 f"auc={auc:.4f} logloss={ll:.4f} "
+                 f"dAUC={d_auc:.2e} dLL={d_ll:.2e}")
+            results[f"{model_name}_{ds_name}"] = (auc, ll)
+    return results
+
+
+if __name__ == "__main__":
+    run()

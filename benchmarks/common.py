@@ -1,0 +1,34 @@
+"""Shared benchmark utilities: robust timing + CSV emission."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+
+__all__ = ["time_fn", "emit", "small_spec"]
+
+
+def time_fn(fn, *args, reps: int = 5, warmup: int = 2) -> float:
+    """Median wall-time (µs) of fn(*args), blocking on the result."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    """The scaffold's required CSV contract: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def small_spec(model_name: str, dataset: str = "criteo", embed_dim: int = 16,
+               hidden: int = 256, max_field: int = 100_000):
+    from repro.configs import ctr_spec
+    return ctr_spec(model_name, dataset, embed_dim, hidden,
+                    max_field=max_field)

@@ -1,0 +1,67 @@
+"""Paper Fig. 7 / Table II — end-to-end inference speedup.
+
+DPIFrame (level "dual": fused embedding + non-GEMM fusion + breadth-first
+whole-graph program) vs the naive baseline (level "naive": per-field serial
+lookups, op-by-op eager dispatch — the PyTorch-A analogue), on the same
+backend, 4 models × {embed 16, 32} × {hidden 256, 512} × 2 datasets.
+(The paper's 1024-wide config is dropped on CPU for wall-clock budget; the
+trend is monotone in width.)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+from repro.configs import ctr_spec
+from repro.core import DualParallelExecutor
+from repro.data.synthetic import AVAZU, CRITEO, synthetic_batch
+from repro.models.ctr import CTR_MODELS
+
+from .common import emit, time_fn
+
+BATCH = 2048
+MAX_FIELD = 100_000     # paper Fig. 10(d): lookup cost is height-independent
+
+
+def run(quick: bool = False) -> dict:
+    datasets = {"criteo": CRITEO, "avazu": AVAZU}
+    dims = [16] if quick else [16, 32]
+    hiddens = [256] if quick else [256, 512]
+    models = ["dcn"] if quick else list(CTR_MODELS)
+    results = {}
+    for ds_name, schema in (list(datasets.items())[:1] if quick
+                            else datasets.items()):
+        schema = schema.scaled(MAX_FIELD)
+        batch = synthetic_batch(schema, 0, BATCH)
+        for model_name in models:
+            for d in dims:
+                for h in hiddens:
+                    spec = ctr_spec(model_name, ds_name, d, h,
+                                    max_field=MAX_FIELD)
+                    model = CTR_MODELS[model_name](spec)
+                    params = model.init(jax.random.PRNGKey(0))
+                    env = {"ids": batch["ids"]}
+                    t = {}
+                    for level in ("naive", "dual"):
+                        ex = DualParallelExecutor(model.build_graph,
+                                                  level=level)
+                        step = ex.build(params)
+                        t[level] = time_fn(step, env, reps=3, warmup=1)
+                    sp = t["naive"] / t["dual"]
+                    key = f"{model_name}_{ds_name}_{d}_{h}"
+                    results[key] = sp
+                    emit(f"e2e/{key}/naive", t["naive"])
+                    emit(f"e2e/{key}/dpiframe", t["dual"],
+                         f"speedup={sp:.2f}x")
+    by_model = {}
+    for k, v in results.items():
+        by_model.setdefault(k.split("_")[0], []).append(v)
+    for m, vals in by_model.items():
+        emit(f"e2e/{m}/avg_speedup", 0.0,
+             f"avg={sum(vals)/len(vals):.2f}x max={max(vals):.2f}x")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,63 @@
+"""Render the dry-run roofline records (experiments/dryrun/*.json) as the
+EXPERIMENTS.md §Roofline markdown table."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(out_dir: str = "experiments/dryrun") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*__*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def table(recs: list[dict], mesh: str = "pod") -> str:
+    rows = ["| arch | shape | compute s | memory s | collective s | "
+            "dominant | useful ratio | roofline frac | fits 16G |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda r: (r["arch"],
+                                         ORDER.index(r["shape"])
+                                         if r["shape"] in ORDER else 9)):
+        if r.get("status") != "ok" or r.get("mesh") != mesh:
+            continue
+        rl = r["roofline"]
+        tmax = max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+        frac = rl["compute_s"] / tmax if tmax else 0.0
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {rl['compute_s']:.4g} | "
+            f"{rl['memory_s']:.4g} | {rl['collective_s']:.4g} | "
+            f"{rl['dominant']} | {rl['useful_ratio']:.2f} | {frac:.2f} | "
+            f"{'Y' if rl['fits_hbm'] else 'N'} |")
+    return "\n".join(rows)
+
+
+def run(quick: bool = False) -> dict:
+    recs = load()
+    ok = [r for r in recs if r.get("status") == "ok"]
+    for r in ok:
+        rl = r["roofline"]
+        tmax = max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+        emit(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+             tmax * 1e6,
+             f"dominant={rl['dominant']} "
+             f"frac={rl['compute_s']/tmax if tmax else 0:.2f}")
+    if ok:
+        print(table(recs))
+    else:
+        emit("roofline/no_records", 0.0,
+             "run: python -m repro.launch.dryrun --all --mesh pod "
+             "--out experiments/dryrun")
+    return {"n_records": len(ok)}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,53 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (scaffold contract).
+``--quick`` shrinks sweeps for CI; default exercises the paper grids.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of benchmark names")
+    args = ap.parse_args()
+
+    from . import (accuracy_parity, breakdown, e2e_speedup,
+                   embedding_sensitivity, roofline_report, scheduling,
+                   workload_allocation)
+    suites = {
+        "accuracy_parity": accuracy_parity,       # Table I
+        "e2e_speedup": e2e_speedup,               # Fig. 7 / Table II
+        "breakdown": breakdown,                   # Fig. 8
+        "embedding_sensitivity": embedding_sensitivity,  # Fig. 10
+        "workload_allocation": workload_allocation,      # Fig. 11
+        "scheduling": scheduling,                 # Fig. 12/13
+        "roofline_report": roofline_report,       # §Roofline
+    }
+    only = set(args.only.split(",")) if args.only else None
+    failed = []
+    for name, mod in suites.items():
+        if only and name not in only:
+            continue
+        print(f"# === {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            mod.run(quick=args.quick)
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+    if failed:
+        print(f"# FAILED: {failed}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

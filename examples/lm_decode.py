@@ -1,0 +1,30 @@
+"""LM serving demo: prefill + KV-cache decode on reduced assigned archs.
+
+Exercises three architecture families end to end through the generation
+driver (dense GQA, RWKV6 constant-state, Zamba2 hybrid).
+
+Run:  PYTHONPATH=src python examples/lm_decode.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models.lm import make_lm_model
+from repro.serving import generate
+
+for arch in ("llama3-8b", "rwkv6-7b", "zamba2-1.2b"):
+    cfg = get_config(arch).reduced(n_layers=4, d_model=128, d_ff=256,
+                                   vocab=512)
+    model = make_lm_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, cfg.vocab)
+    t0 = time.perf_counter()
+    out = generate(model, params, prompt, max_new=16)
+    dt = time.perf_counter() - t0
+    assert out.shape == (2, 12 + 16)
+    print(f"{arch:12s} ({cfg.family:6s}) generated {out.shape[1]-12} tokens "
+          f"in {dt*1e3:6.1f}ms -> {out[0, 12:18].tolist()}...")
+print("decode paths OK across families")

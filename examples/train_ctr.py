@@ -1,0 +1,69 @@
+"""End-to-end driver: train a ~100M-parameter DCNv2 on synthetic Criteo for
+a few hundred steps with checkpoint/restart fault tolerance, then evaluate
+AUC/LogLoss served through the DPIFrame executor.
+
+The full Criteo schema at d=16 gives ≈107M embedding parameters — the
+"~100M model for a few hundred steps" deliverable. Interrupt it at any
+point and re-run: it resumes from the newest intact checkpoint.
+
+Run:  PYTHONPATH=src python examples/train_ctr.py [--steps 300]
+"""
+
+import argparse
+
+import numpy as np
+import jax
+
+from repro.configs import ctr_spec
+from repro.core import DualParallelExecutor
+from repro.data.synthetic import CRITEO, synthetic_batch
+from repro.models.ctr import DCNv2
+from repro.training import (AdamWConfig, TrainLoopConfig, adamw_init,
+                            adamw_update, logloss, roc_auc, run_train_loop)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=1024)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ctr_ckpt")
+    args = ap.parse_args()
+
+    schema = CRITEO          # full heavy-tail schema: ~6.7M rows
+    spec = ctr_spec("dcnv2", "criteo", embed_dim=16, hidden=256)
+    model = DCNv2(spec)
+    params = model.init(jax.random.PRNGKey(0))
+    n = model.n_params(params)
+    print(f"model: dcnv2/criteo  params = {n/1e6:.1f}M")
+
+    opt = AdamWConfig(lr=1e-3)
+    state = adamw_init(params, opt)
+
+    @jax.jit
+    def step_fn(state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(state.params, batch)
+        state, metrics = adamw_update(state, grads, opt)
+        return state, {"loss": loss, **metrics}
+
+    loop_cfg = TrainLoopConfig(total_steps=args.steps, ckpt_every=100,
+                               ckpt_dir=args.ckpt_dir, log_every=25)
+    state, hist = run_train_loop(
+        step_fn, state,
+        batch_fn=lambda s: synthetic_batch(schema, s, args.batch),
+        cfg=loop_cfg)
+
+    # evaluation through the DPIFrame dual executor
+    ex = DualParallelExecutor(model.build_graph, level="dual")
+    serve = ex.build(state.params)
+    val = synthetic_batch(schema, 10_000, 8192)
+    logits = np.asarray(serve({"ids": val["ids"]})).reshape(-1)
+    probs = 1 / (1 + np.exp(-logits))
+    labels = np.asarray(val["labels"])
+    print(f"val AUC = {roc_auc(labels, probs):.4f}   "
+          f"LogLoss = {logloss(labels, probs):.4f}")
+    print(f"first-loss {hist[0]['loss']:.4f} -> last-loss "
+          f"{hist[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""repro — DPIFrame (dual-level-parallelism CTR inference) on TPU in JAX+Pallas.
+
+Public API surface:
+    repro.core            the paper's contribution (fused embedding, opgraph,
+                          breadth-first scheduler, dual-parallel executor)
+    repro.kernels         Pallas TPU kernels + jnp reference oracles
+    repro.models          CTR model zoo (paper) + LM architecture zoo (assigned)
+    repro.configs         architecture registry (``get_config(name)``)
+    repro.launch          mesh construction, dry-run, train/serve drivers
+    repro.analysis        roofline accounting from compiled HLO
+"""
+
+__version__ = "0.1.0"

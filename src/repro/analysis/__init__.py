@@ -1,0 +1,9 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+
+from . import hw
+from .analytic import analytic_cost, model_flops, param_stats
+from .hlo_parse import parse_hlo
+from .roofline import RooflineReport, analyze_cell
+
+__all__ = ["hw", "analytic_cost", "model_flops", "param_stats",
+           "parse_hlo", "RooflineReport", "analyze_cell"]

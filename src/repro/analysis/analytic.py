@@ -1,0 +1,144 @@
+"""Closed-form cost model per (arch × shape): MODEL_FLOPS and the HBM-traffic
+estimate that feeds the roofline memory term.
+
+MODEL_FLOPS follows the assignment: 6·N·D for training (N = active
+non-embedding params, D = tokens), 2·N·D for prefill, 2·N·B for one decode
+step. The HBM model is a documented lower-bound estimate (weights traffic +
+optimizer traffic + activation-carry IO + KV/state traffic); assumptions are
+listed field by field in EXPERIMENTS.md §Methodology.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import numpy as np
+
+from repro.configs import SHAPES, get_config
+from repro.models.lm import make_lm_model
+
+__all__ = ["param_stats", "model_flops", "hbm_bytes_per_device",
+           "AnalyticCost", "analytic_cost"]
+
+_DT = {"float32": 4, "bfloat16": 2, "float16": 2}
+
+
+def _n(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def param_stats(arch: str) -> dict:
+    """total / active / embedding parameter counts (exact, via eval_shape)."""
+    cfg = get_config(arch)
+    model = make_lm_model(cfg)
+    shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    total = _n(shapes)
+    embed = 0
+    for name in ("embed", "lm_head", "pos_dec"):
+        if name in shapes:
+            embed += int(np.prod(shapes[name].shape))
+    active = total
+    if cfg.n_experts:
+        expert = 0
+        layers = shapes["layers"]
+        for name in ("w_gate", "w_up", "w_down"):
+            expert += int(np.prod(layers["moe"][name].shape))
+        active = total - expert + int(expert * cfg.top_k / cfg.n_experts)
+    return {"total": total, "active": active, "embed": embed,
+            "param_bytes": total * _DT[cfg.dtype]}
+
+
+def model_flops(arch: str, shape: str) -> float:
+    """Global MODEL_FLOPS for one step of this cell."""
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    st = param_stats(arch)
+    n = st["active"] - st["embed"]
+    if cell.kind == "train":
+        return 6.0 * n * cell.batch * cell.seq
+    if cell.kind == "prefill":
+        return 2.0 * n * cell.batch * cell.seq
+    return 2.0 * n * cell.batch               # decode: one token per row
+
+
+@dataclasses.dataclass
+class AnalyticCost:
+    model_flops: float            # global
+    hbm_bytes_per_device: float   # per device per step
+    components: dict
+
+
+def hbm_bytes_per_device(arch: str, shape: str, chips: int,
+                         n_micro: int = 1,
+                         opt_state_bytes_per_param: int = 8) -> AnalyticCost:
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    st = param_stats(arch)
+    pb = st["param_bytes"]
+    act_dt = _DT[cfg.dtype]
+    d = cfg.d_model
+    L = cfg.n_layers + cfg.encoder_layers
+    comp: dict[str, float] = {}
+
+    if cell.kind == "train":
+        # weights: fwd + remat-fwd + bwd ≈ 3 reads per microbatch
+        comp["weights_read"] = 3.0 * n_micro * pb / chips
+        # optimizer: read+write m, v (state dtype) + read+write params
+        comp["optimizer"] = (2 * 2 * st["total"] * opt_state_bytes_per_param / 2
+                             + 2 * pb) / chips
+        comp["grads"] = 2 * st["total"] * 4 / chips       # f32 accum rw
+        # activation carry: written fwd, read bwd, once per layer over the
+        # whole global batch (microbatching doesn't change the total)
+        comp["activations"] = 2.0 * L * cell.batch * cell.seq * d * act_dt / chips
+    elif cell.kind == "prefill":
+        comp["weights_read"] = pb / chips
+        comp["activations"] = 2.0 * L * cell.batch * cell.seq * d * act_dt / chips
+        comp["kv_write"] = _cache_bytes(arch, cell) / chips
+    else:  # decode
+        comp["weights_read"] = _decode_weight_bytes(arch) / chips
+        cb = _cache_bytes(arch, cell)
+        comp["cache_read"] = cb / chips
+        comp["cache_write"] = min(cb / chips, 1e7)  # one-slot update
+        comp["activations"] = 2.0 * L * cell.batch * d * act_dt / chips
+    return AnalyticCost(model_flops=model_flops(arch, shape),
+                        hbm_bytes_per_device=float(sum(comp.values())),
+                        components=comp)
+
+
+def _cache_bytes(arch: str, cell) -> float:
+    """KV / SSM state bytes for the full cache at this cell's shape."""
+    from repro.configs import input_specs
+    cfg = get_config(arch)
+    if cell.kind == "decode":
+        specs = input_specs(arch, cell.name)
+        total = 0
+        for leaf in jax.tree.leaves(specs["cache"]):
+            total += int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+        return float(total)
+    # prefill: KV written for (batch, seq); layers that actually hold KV
+    if cfg.attention == "none":
+        return 0.0
+    if cfg.family == "hybrid":
+        model = make_lm_model(cfg)
+        layers_kv = model.n_shared()
+    elif cfg.family == "encdec":
+        layers_kv = 2 * cfg.n_layers           # self + cross per dec layer
+    else:
+        layers_kv = cfg.n_layers
+    kv = 2 * (layers_kv * cell.batch * cell.seq
+              * cfg.n_kv_heads * cfg.hd) * _DT[cfg.dtype]
+    return float(kv)
+
+
+def _decode_weight_bytes(arch: str) -> float:
+    """Weights actually read per decode step (MoE reads routed experts only
+    when batch << experts; with batch ≥ experts assume all touched)."""
+    st = param_stats(arch)
+    return float(st["param_bytes"])
+
+
+def analytic_cost(arch: str, shape: str, chips: int,
+                  n_micro: int = 1) -> AnalyticCost:
+    return hbm_bytes_per_device(arch, shape, chips, n_micro)

@@ -1,0 +1,148 @@
+"""Architecture registry: 10 assigned LM architectures + paper CTR configs.
+
+Every assigned arch lives in its own module (exact published config, with
+``[source; tier]`` provenance) and is selectable via ``--arch <id>``.
+``input_specs(arch, shape)`` returns ShapeDtypeStruct stand-ins for every
+step-function input — weak-type-correct, shardable, no device allocation.
+
+Shape cells (LM):
+    train_4k     seq 4096   global_batch 256   lowers train_step
+    prefill_32k  seq 32768  global_batch 32    lowers prefill
+    decode_32k   seq 32768  global_batch 128   lowers serve_step (1 token,
+                                               KV cache of seq length)
+    long_500k    seq 524288 global_batch 1     serve_step; SSM/hybrid only —
+                                               dense-attention archs skip
+                                               (DESIGN.md S4)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm import LMConfig, make_lm_model
+from repro.models.ctr import CTRModelSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq: int
+    batch: int
+    kind: str          # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+_ARCH_MODULES = {
+    "granite-8b": "granite_8b",
+    "smollm-360m": "smollm_360m",
+    "llama3-8b": "llama3_8b",
+    "qwen3-4b": "qwen3_4b",
+    "whisper-small": "whisper_small",
+    "rwkv6-7b": "rwkv6_7b",
+    "phi3.5-moe-42b-a6.6b": "phi35_moe",
+    "llama4-maverick-400b-a17b": "llama4_maverick",
+    "pixtral-12b": "pixtral_12b",
+    "zamba2-1.2b": "zamba2_12b",
+}
+
+ARCH_NAMES = tuple(_ARCH_MODULES)
+
+
+def get_config(name: str) -> LMConfig:
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[name]}")
+    return mod.CONFIG
+
+
+def get_source(name: str) -> str:
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[name]}")
+    return mod.SOURCE
+
+
+def applicable_shapes(name: str) -> dict[str, str]:
+    """shape -> "run" or a skip reason (the 40-cell grid bookkeeping)."""
+    cfg = get_config(name)
+    out = {}
+    for s in SHAPES:
+        if s == "long_500k" and cfg.attention == "full":
+            out[s] = ("SKIP: pure full-attention arch - 524k dense KV "
+                      "decode reserved for sub-quadratic archs per "
+                      "assignment (DESIGN.md S4)")
+        else:
+            out[s] = "run"
+    return out
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def input_specs(name: str, shape: str) -> dict:
+    """Step-function inputs for (arch, shape): tokens/frontend stubs, and -
+    for decode cells - the KV/state cache structs (obtained via eval_shape
+    on ``init_cache``, so they exactly match the model)."""
+    cfg = get_config(name)
+    cell = SHAPES[shape]
+    gb, s = cell.batch, cell.seq
+    d = cfg.d_model
+    tok = "int32"
+
+    if cfg.family == "encdec":
+        if cell.kind in ("train", "prefill"):
+            return {"tokens": _sds((gb, s), tok),
+                    "frames": _sds((gb, s, d), cfg.dtype)}
+        # decode: one token + self-cache of length s + cross memory cache
+        model = make_lm_model(cfg)
+        cache = jax.eval_shape(lambda: model.init_cache(gb, s, s))
+        return {"tokens": _sds((gb, 1), tok), "cache": cache}
+
+    if cfg.family == "vlm":
+        s_img = s // 4
+        s_txt = s - s_img
+        if cell.kind in ("train", "prefill"):
+            return {"tokens": _sds((gb, s_txt), tok),
+                    "patch_embeds": _sds((gb, s_img, d), cfg.dtype)}
+        model = make_lm_model(cfg)
+        cache = jax.eval_shape(lambda: model.init_cache(gb, s))
+        return {"tokens": _sds((gb, 1), tok), "cache": cache}
+
+    # decoder-only families (dense / moe / ssm / hybrid)
+    if cell.kind in ("train", "prefill"):
+        return {"tokens": _sds((gb, s), tok)}
+    model = make_lm_model(cfg)
+    if cfg.family == "ssm":
+        cache = jax.eval_shape(lambda: model.init_cache(gb, 0))
+    else:
+        cache = jax.eval_shape(lambda: model.init_cache(gb, s))
+    return {"tokens": _sds((gb, 1), tok), "cache": cache}
+
+
+# ---------------------------------------------------------------------------
+# paper CTR configs (SV-A: 4 models x {16, 32} x {256, 512, 1024})
+# ---------------------------------------------------------------------------
+
+def ctr_spec(model: str, dataset: str, embed_dim: int = 16,
+             hidden: int = 256, max_field: int | None = None) -> CTRModelSpec:
+    from repro.data.synthetic import AVAZU, CRITEO
+    schema = {"avazu": AVAZU, "criteo": CRITEO}[dataset]
+    if max_field:
+        schema = schema.scaled(max_field)
+    return CTRModelSpec(
+        name=f"{model}_{dataset}_{embed_dim}_{hidden}",
+        field_sizes=schema.field_sizes,
+        embed_dim=embed_dim,
+        hidden=(hidden,) * 3,
+        cross_layers=3)

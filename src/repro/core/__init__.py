@@ -1,0 +1,30 @@
+"""repro.core — DPIFrame's contribution as composable JAX modules.
+
+  fused_embedding.py  C2: mega-table fused multi-table lookup (+ sharded)
+  opgraph.py          C5: operator DAG + non-GEMM fusion pass
+  scheduler.py        C4: breadth-first stream scheduling (Alg. 2)
+  dual_parallel.py    C1: the dual-parallel executor (Fig.-8 levels)
+"""
+
+from .dual_parallel import LEVELS, DualParallelExecutor
+from .fused_embedding import (FusedEmbeddingCollection, FusedEmbeddingSpec,
+                              sharded_vocab_lookup)
+from .opgraph import Op, FusedOp, OpGraph, fuse_non_gemm, register_fused_kernel
+from .scheduler import (breadth_first_schedule, depth_first_schedule,
+                        full_order)
+
+__all__ = [
+    "LEVELS",
+    "DualParallelExecutor",
+    "FusedEmbeddingCollection",
+    "FusedEmbeddingSpec",
+    "sharded_vocab_lookup",
+    "Op",
+    "FusedOp",
+    "OpGraph",
+    "fuse_non_gemm",
+    "register_fused_kernel",
+    "breadth_first_schedule",
+    "depth_first_schedule",
+    "full_order",
+]

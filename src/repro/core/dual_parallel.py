@@ -1,0 +1,145 @@
+"""DualParallelExecutor — contribution C1, tying C2–C5 together.
+
+A CTR model exposes its forward pass as an ``OpGraph`` with four modules:
+``embedding`` → (``explicit`` ∥ ``implicit``) → ``head``. The executor turns
+that graph into a runnable step function at one of four optimization levels,
+mirroring the paper's Fig.-8 breakdown exactly:
+
+  level "naive"      per-field serial embedding, op-by-op eager dispatch,
+                     depth-first order             (PyTorch-A analogue)
+  level "fused_emb"  Alg.-1 fused mega-table lookup, rest eager
+                                                    (DPIFrame-A)
+  level "fused_all"  + non-GEMM subgraph fusion (C5), fused groups each
+                     dispatched as one unit         (DPIFrame-B)
+  level "dual"       + breadth-first interleaved branch schedule (C4) and
+                     whole-graph jit so XLA's static scheduler can overlap
+                     the two branches               (DPIFrame-C)
+
+"Eager" here means each op is dispatched as its own jit-compiled call with
+its own host→device round trip — the JAX reflection of per-kernel launch
+overhead that the paper attributes to PyTorch. "dual" traces the whole graph
+(in breadth-first order) into ONE XLA program.
+
+Accuracy invariance (paper Table I): every level computes the identical
+function — asserted in tests to float exactness on same-backend dispatch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+
+from .opgraph import OpGraph, fuse_non_gemm, op_outputs
+from .scheduler import (breadth_first_schedule, depth_first_schedule,
+                        full_order)
+
+__all__ = ["DualParallelExecutor", "LEVELS"]
+
+LEVELS = ("naive", "fused_emb", "fused_all", "dual")
+
+
+@dataclasses.dataclass
+class ExecutorStats:
+    n_ops_before: int
+    n_ops_after: int
+    n_fused_groups: int
+    kernels_used: tuple[str, ...]
+    schedule_policy: str
+    queue: tuple[str, ...]
+
+
+class DualParallelExecutor:
+    """Builds and runs a dual-parallel inference step from a model graph.
+
+    Args:
+        graph_builder: callable ``(params, level) -> OpGraph``. Models build
+            the graph differently per level only for the *embedding* module
+            (serial vs fused lookup); all other ops are identical — fusion
+            and scheduling are applied here, not inside the model.
+        level: one of LEVELS.
+        branch_order: "longer_first" (paper default), "explicit_first",
+            "implicit_first" (§V-H startup-sequence ablation).
+    """
+
+    def __init__(self, graph_builder: Callable[..., OpGraph], *,
+                 level: str = "dual", branch_order: str = "longer_first"):
+        if level not in LEVELS:
+            raise ValueError(f"level must be one of {LEVELS}, got {level!r}")
+        self.graph_builder = graph_builder
+        self.level = level
+        self.branch_order = branch_order
+        self._stats: ExecutorStats | None = None
+
+    # -- graph preparation ---------------------------------------------------
+    def prepare(self, params: Any) -> tuple[OpGraph, list[str]]:
+        graph = self.graph_builder(params, self.level)
+        n_before = graph.n_kernels()
+        if self.level in ("fused_all", "dual"):
+            graph = fuse_non_gemm(graph)
+        explicit = graph.by_module("explicit")
+        implicit = graph.by_module("implicit")
+        if self.level == "dual":
+            if self.branch_order == "longer_first":
+                sched = breadth_first_schedule(explicit, implicit)
+            elif self.branch_order == "explicit_first":
+                sched = breadth_first_schedule(explicit, implicit,
+                                               longer_first=len(explicit) >= len(implicit))
+            elif self.branch_order == "implicit_first":
+                sched = breadth_first_schedule(explicit, implicit,
+                                               longer_first=len(implicit) >= len(explicit))
+            else:
+                raise ValueError(self.branch_order)
+        else:
+            sched = depth_first_schedule(explicit, implicit)
+        order = full_order(graph, sched)
+        fused_groups = [op for op in graph.ops if hasattr(op, "members")]
+        self._stats = ExecutorStats(
+            n_ops_before=n_before,
+            n_ops_after=graph.n_kernels(),
+            n_fused_groups=len(fused_groups),
+            kernels_used=tuple(op.kernel for op in fused_groups
+                               if getattr(op, "kernel", None)),
+            schedule_policy=sched.policy,
+            queue=tuple(sched.queue),
+        )
+        return graph, order
+
+    @property
+    def stats(self) -> ExecutorStats:
+        if self._stats is None:
+            raise RuntimeError("call build() first")
+        return self._stats
+
+    # -- runnable step ---------------------------------------------------------
+    def build(self, params: Any) -> Callable[[dict[str, Any]], Any]:
+        """Returns ``step(inputs_env) -> output`` at the configured level."""
+        graph, order = self.prepare(params)
+        ops_in_order = [graph.op(n) for n in order]
+        out_edge = ops_in_order[-1].output
+
+        if self.level == "dual":
+            # one traced program, breadth-first trace order
+            def whole(env):
+                e = graph.execute(env, order)
+                return e[out_edge]
+            return jax.jit(whole)
+
+        # eager op-by-op dispatch: each op is its own jit call (its own
+        # device dispatch), mirroring per-kernel launch overhead
+        jitted = [jax.jit(op.fn) for op in ops_in_order]
+
+        def eager(env):
+            env = dict(env)
+            for op, jfn in zip(ops_in_order, jitted):
+                res = jfn(*[env[e] for e in op.inputs])
+                outs = op_outputs(op)
+                if len(outs) == 1:
+                    env[outs[0]] = res
+                else:
+                    for name, val in zip(outs, res):
+                        env[name] = val
+                jax.block_until_ready(res)
+            return env[out_edge]
+        return eager

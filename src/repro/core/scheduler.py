@@ -1,0 +1,123 @@
+"""Breadth-first stream scheduling (paper Algorithm 2, contribution C4).
+
+GPU original: put the explicit/implicit interaction branches on two CUDA
+streams and *interleave* operator launches breadth-first, longer branch
+first, so both branches start executing as early as possible.
+
+TPU adaptation (DESIGN.md §2): there are no user-visible streams — XLA's
+static scheduler decides concurrency from the HLO dependence graph. The
+schedule produced here is used as the **trace order** by the executor, which
+(a) reproduces Alg. 2 exactly as a queue-construction algorithm, (b) gives
+XLA an interference-free interleaved program, and (c) is inspectable: tests
+assert the queue is a valid topological order and benchmarks compare
+breadth-first vs depth-first orders end to end.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from .opgraph import FusedOp, Op, OpGraph
+
+__all__ = ["LogicalStream", "breadth_first_schedule", "depth_first_schedule",
+           "Schedule"]
+
+
+@dataclasses.dataclass
+class LogicalStream:
+    """TPU stand-in for a CUDA stream: an ordered launch lane.
+
+    Ops inside one stream are sequential; ops in different streams carry no
+    ordering constraint beyond data dependence (= what multi-stream gives
+    the GPU, and what the dependence graph gives XLA).
+    """
+    name: str
+    ops: list[str] = dataclasses.field(default_factory=list)
+
+    def add(self, ops: Sequence[str]) -> None:
+        self.ops.extend(ops)
+
+
+@dataclasses.dataclass
+class Schedule:
+    streams: dict[str, LogicalStream]
+    queue: list[str]                  # launch order (the paper's Q)
+    policy: str
+
+    def stream_of(self, op_name: str) -> str:
+        for s in self.streams.values():
+            if op_name in s.ops:
+                return s.name
+        raise KeyError(op_name)
+
+
+def breadth_first_schedule(explicit: Sequence[Op | FusedOp],
+                           implicit: Sequence[Op | FusedOp],
+                           longer_first: bool = True) -> Schedule:
+    """Literal transcription of Algorithm 2.
+
+    Args:
+        explicit: ops of the explicit interaction module (in branch order).
+        implicit: ops of the implicit interaction module.
+        longer_first: paper behaviour — "the module that has more operators
+            launches first … it can help hide the startup costs"; setting
+            False flips the tie order (the §V-H startup-sequence ablation).
+
+    Returns:
+        Schedule with S_explicit / S_implicit streams and interleaved Q.
+    """
+    ops_explicit = [op.name for op in explicit]          # line 1
+    ops_implicit = [op.name for op in implicit]          # line 2
+    n_explicit = len(ops_explicit)                       # line 3
+    n_implicit = len(ops_implicit)                       # line 4
+    s_explicit = LogicalStream("S_explicit")             # line 5
+    s_implicit = LogicalStream("S_implicit")             # line 6
+    s_explicit.add(ops_explicit)                         # line 7
+    s_implicit.add(ops_implicit)                         # line 8
+    queue: list[str] = []
+    # line 9: the module with more operators launches first
+    longer, shorter = ((ops_implicit, ops_explicit) if n_implicit > n_explicit
+                       else (ops_explicit, ops_implicit))
+    if not longer_first:
+        # §V-H ablation: start with the *other* branch regardless of length
+        longer, shorter = shorter, longer
+    for i in range(min(len(longer), len(shorter))):      # lines 9–13 / 18–22
+        queue.append(longer[i])
+        queue.append(shorter[i])
+    tail = longer if len(longer) >= len(shorter) else shorter
+    for j in range(min(len(longer), len(shorter)), len(tail)):  # 14–16 / 23–25
+        queue.append(tail[j])
+    return Schedule(streams={"S_explicit": s_explicit,
+                             "S_implicit": s_implicit},
+                    queue=queue, policy="breadth_first")
+
+
+def depth_first_schedule(explicit: Sequence[Op | FusedOp],
+                         implicit: Sequence[Op | FusedOp],
+                         explicit_first: bool = True) -> Schedule:
+    """The framework-default strawman: drain one stream, then the other."""
+    ops_explicit = [op.name for op in explicit]
+    ops_implicit = [op.name for op in implicit]
+    s_explicit = LogicalStream("S_explicit", list(ops_explicit))
+    s_implicit = LogicalStream("S_implicit", list(ops_implicit))
+    queue = (ops_explicit + ops_implicit if explicit_first
+             else ops_implicit + ops_explicit)
+    return Schedule(streams={"S_explicit": s_explicit,
+                             "S_implicit": s_implicit},
+                    queue=queue, policy="depth_first")
+
+
+def full_order(graph: OpGraph, schedule: Schedule) -> list[str]:
+    """Embed the two-branch queue into the whole-graph execution order:
+    embedding ops first (both branches consume the embedded features), then
+    the interleaved queue, then head ops."""
+    pre = [op.name for op in graph.ops if op.module == "embedding"]
+    post = [op.name for op in graph.ops
+            if op.module not in ("embedding", "explicit", "implicit")]
+    order = pre + schedule.queue + post
+    if not graph.is_valid_order(order):
+        raise ValueError(
+            f"{schedule.policy} queue is not a valid topological order — "
+            "branch ops must be emitted in intra-branch dependence order")
+    return order

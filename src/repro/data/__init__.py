@@ -1,0 +1,7 @@
+"""Synthetic CTR data (Avazu/Criteo schemas) + sharded pipeline."""
+
+from .pipeline import CTRLoader
+from .synthetic import AVAZU, CRITEO, DatasetSchema, make_schema, synthetic_batch
+
+__all__ = ["CTRLoader", "AVAZU", "CRITEO", "DatasetSchema", "make_schema",
+           "synthetic_batch"]

@@ -1,0 +1,5 @@
+"""Sharding policies (DP/FSDP/TP/EP/SP) for the production mesh."""
+
+from . import sharding
+
+__all__ = ["sharding"]

@@ -1,0 +1,304 @@
+"""Per-architecture sharding policies: DP(+pod) × FSDP(data) × TP/EP/SP(model).
+
+Two products:
+
+* ``make_shard_fn(mesh)`` — the activation-constraint callable injected into
+  models (logical axis names -> mesh axes via LOGICAL_RULES).
+* ``param_specs(family, shapes)`` — a PartitionSpec pytree matching the
+  params tree, built from path-pattern rules. The same specs shard the
+  optimizer mirror states (ZeRO-style: fp32 m/v live fully sharded).
+
+Policy summary (DESIGN.md §5):
+  batch        -> ("pod", "data")         (DP across pods × data axis)
+  TP           -> "model" on heads / d_ff / vocab / experts
+  FSDP         -> "data" on the non-TP matrix dim of every large weight
+  SP           -> "model" on the KV-cache sequence dim for decode cells
+                  (flash-decode style distributed attention, GSPMD-lowered)
+Uneven shardings (smollm's 15 heads over 16, whisper's 51865 vocab) are
+legal under GSPMD — padding is implicit; the dry-run proves they compile.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["LOGICAL_RULES", "make_shard_fn", "param_specs", "batch_specs",
+           "cache_specs", "to_named", "mesh_batch_axes"]
+
+
+def mesh_batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def LOGICAL_RULES(mesh: Mesh) -> dict[str, Any]:
+    batch = mesh_batch_axes(mesh)
+    b = batch if len(batch) > 1 else (batch[0] if batch else None)
+    return {
+        "batch": b,
+        "seq": None,
+        "kv_seq": "model",       # sequence-parallel KV cache (decode)
+        "embed": None,
+        "heads": "model",
+        "kv_heads": "model",
+        "mlp": "model",
+        "expert_mlp": None,      # model axis is taken by experts in MoE
+        "vocab": "model",
+        "experts": "model",
+    }
+
+
+def LOGICAL_RULES_FSDP(mesh: Mesh) -> dict[str, Any]:
+    """Pure-FSDP policy (H2): batch over (data × model), weights fully
+    sharded and gathered per layer, NO tensor parallelism — eliminates the
+    per-layer activation all-reduces that dominate the TP policy's
+    collective term."""
+    batch = tuple(a for a in ("data", "model") if a in mesh.axis_names)
+    b = batch if len(batch) > 1 else (batch[0] if batch else None)
+    rules = {k: None for k in LOGICAL_RULES(mesh)}
+    rules["batch"] = b
+    rules["kv_seq"] = None
+    return rules
+
+
+def make_shard_fn(mesh: Mesh, policy: str = "tp_fsdp"):
+    rules = (LOGICAL_RULES_FSDP(mesh) if policy == "fsdp"
+             else LOGICAL_RULES(mesh))
+
+    def shard(x, logical_axes):
+        spec = P(*(rules.get(a) if a is not None else None
+                   for a in logical_axes))
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, spec))
+    return shard
+
+
+def fsdp_param_specs(specs: Any) -> Any:
+    """Rewrite TP×FSDP param specs to pure-FSDP: the TP ('model') dim takes
+    the full ('data','model') grid; the old FSDP ('data') dim is freed."""
+    def fix(spec):
+        out = []
+        for dim in spec:
+            if dim == "model":
+                out.append(("data", "model"))
+            elif dim == "data":
+                out.append(None)
+            else:
+                out.append(dim)
+        return P(*out)
+    return jax.tree.map(fix, specs, is_leaf=lambda s: isinstance(s, P))
+
+
+# ---------------------------------------------------------------------------
+# parameter partition specs (path-pattern rules per family)
+# ---------------------------------------------------------------------------
+# Each rule: (regex over "/"-joined tree path, PartitionSpec *without* the
+# leading scan dim — a leading None is prepended automatically when the leaf
+# has one more dim than the spec).
+
+_DENSE_RULES = [
+    (r"embed$", P("model", "data")),
+    (r"lm_head$", P("data", "model")),
+    (r"attn/w[qkv]$", P("data", "model")),
+    (r"attn/wo$", P("model", "data")),
+    (r"mlp/w_(gate|up|in)$", P("data", "model")),
+    (r"mlp/w_(down|out)$", P("model", "data")),
+    (r"mlp/b_in$", P("model")),
+    (r"pos_dec$", P(None, None)),
+]
+
+_MOE_RULES = [
+    (r"moe/router$", P(None, None)),
+    (r"moe/w_(gate|up)$", P("model", "data", None)),    # E × D × F
+    (r"moe/w_down$", P("model", None, "data")),         # E × F × D
+] + _DENSE_RULES
+
+# H3 (llama4-scale): weight-stationary experts — E over model AND the FFN
+# dim over data so the 800 GB expert bank never moves; the (much smaller)
+# dispatched token buffers replicate over data instead (moe.py).
+_MOE_TOKEN_REPLICATE_RULES = [
+    (r"moe/router$", P(None, None)),
+    (r"moe/w_(gate|up)$", P("model", None, "data")),    # E × D × F/data
+    (r"moe/w_down$", P("model", "data", None)),         # E × F/data × D
+] + _DENSE_RULES
+
+_RWKV_RULES = [
+    (r"embed$", P("model", "data")),
+    (r"lm_head$", P("data", "model")),
+    (r"w[rkvg]$", P("data", "model")),
+    (r"wo$", P("model", "data")),
+    (r"wck$", P("data", "model")),
+    (r"wcv$", P("model", "data")),
+    (r"wcr$", P("data", "model")),
+    (r"w_lora_a$", P("data", None)),
+    (r"w_lora_b$", P(None, "data")),
+    (r"(^|/)u$", P("model", None)),
+]
+
+_ZAMBA_RULES = [
+    (r"embed$", P("model", "data")),
+    (r"lm_head$", P("data", "model")),
+    (r"mamba/w_in$", P("data", "model")),
+    (r"mamba/w_out$", P("model", "data")),
+    (r"mamba/conv_w$", P(None, "model")),
+    (r"mamba/ln_y$", P("model")),
+    (r"shared/w_in$", P("data", "model")),
+    (r"shared/attn/w[qkv]$", P("data", "model")),
+    (r"shared/attn/wo$", P("model", "data")),
+    (r"shared/mlp/w_(gate|up)$", P("data", "model")),
+    (r"shared/mlp/w_down$", P("model", "data")),
+]
+
+_ENCDEC_RULES = [
+    (r"(xattn|attn)/w[qkv]$", P("data", "model")),
+    (r"(xattn|attn)/wo$", P("model", "data")),
+] + _DENSE_RULES
+
+_FAMILY_RULES = {
+    "dense": _DENSE_RULES,
+    "vlm": _DENSE_RULES,
+    "moe": _MOE_RULES,
+    "ssm": _RWKV_RULES,
+    "hybrid": _ZAMBA_RULES,
+    "encdec": _ENCDEC_RULES,
+}
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_specs(family: str, shapes: Any, cfg: Any = None) -> Any:
+    """ShapeDtypeStruct tree -> PartitionSpec tree for the family."""
+    rules = _FAMILY_RULES[family]
+    if (family == "moe" and cfg is not None
+            and getattr(cfg, "moe_token_replicate", False)):
+        rules = _MOE_TOKEN_REPLICATE_RULES
+
+    def leaf_spec(path, leaf):
+        ps = _path_str(path)
+        for pat, spec in rules:
+            if re.search(pat, ps):
+                if len(spec) == leaf.ndim - 1:
+                    return P(None, *spec)          # stacked-scan leading dim
+                if len(spec) == leaf.ndim:
+                    return spec
+                # rank mismatch (e.g. 1-D spec vs scalar) -> replicate
+                return P()
+        return P()                                  # norms, scalars: replicate
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, shapes)
+
+
+def ctr_param_specs(shapes: Any) -> Any:
+    """CTR models: mega-tables row-sharded over model, dense replicated
+    (they are latency-bound, DESIGN §5)."""
+    def leaf_spec(path, leaf):
+        ps = _path_str(path)
+        if ps.endswith("mega") and leaf.ndim == 2:
+            return P("model", None)
+        if leaf.ndim == 2 and leaf.shape[0] * leaf.shape[1] >= 1 << 16:
+            return P(None, "model")
+        return P()
+    return jax.tree_util.tree_map_with_path(leaf_spec, shapes)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_specs(mesh: Mesh, batch_tree: Any) -> Any:
+    """Shard the leading (global-batch) dim of every batch leaf."""
+    b = mesh_batch_axes(mesh)
+    b = b if len(b) > 1 else b[0]
+
+    def leaf(x):
+        return P(*([b] + [None] * (x.ndim - 1)))
+    return jax.tree.map(leaf, batch_tree)
+
+
+def cache_specs(family: str, mesh: Mesh, cache_tree: Any,
+                seq_shard: bool = True) -> Any:
+    """KV/state cache placement for decode cells.
+
+    Dense/MoE/VLM k,v: (L, B, S, kv, hd) -> batch over data(+pod), seq over
+    model (SP flash-decode). SSM states: batch over data, heads over model.
+    """
+    b = mesh_batch_axes(mesh)
+    b = b if len(b) > 1 else b[0]
+    sp = "model" if seq_shard else None
+
+    def leaf(path, x):
+        ps = _path_str(path)
+        if x.ndim == 5 and ("k" in ps or "v" in ps):   # (L, B, S, kv, hd)
+            return P(None, b, sp, None, None)
+        if ps.endswith("index"):
+            return P()
+        if x.ndim >= 4:                                 # ssm states etc.
+            return P(None, b, "model", *([None] * (x.ndim - 3)))
+        if x.ndim >= 2:
+            return P(None, b, *([None] * (x.ndim - 2)))
+        return P()
+    return jax.tree_util.tree_map_with_path(leaf, cache_tree)
+
+
+def drop_axis(spec_tree: Any, axis: str) -> Any:
+    """Remove one mesh axis from every PartitionSpec in the tree."""
+    def fix(spec):
+        out = []
+        for dim in spec:
+            if dim == axis:
+                out.append(None)
+            elif isinstance(dim, tuple):
+                kept = tuple(a for a in dim if a != axis)
+                out.append(kept if len(kept) > 1 else
+                           (kept[0] if kept else None))
+            else:
+                out.append(dim)
+        return P(*out)
+    return jax.tree.map(fix, spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def fit_spec(mesh: Mesh, spec: P, shape) -> P:
+    """Drop mesh axes from dims they don't divide evenly.
+
+    pjit *argument* shardings must divide exactly (unlike intermediate
+    constraints, which GSPMD pads): whisper's 51865 vocab over 16, or a
+    batch of 1 on the data axis, must fall back to replication on that dim.
+    """
+    dims = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for size, axes in zip(shape, dims):
+        if axes is None:
+            out.append(None)
+            continue
+        ax_tuple = axes if isinstance(axes, tuple) else (axes,)
+        n = 1
+        for a in ax_tuple:
+            n *= mesh.shape[a]
+        out.append(axes if size % n == 0 else None)
+    return P(*out)
+
+
+def fit_spec_tree(mesh: Mesh, specs: Any, shapes: Any) -> Any:
+    return jax.tree.map(
+        lambda s, x: fit_spec(mesh, s, x.shape), specs, shapes,
+        is_leaf=lambda s: isinstance(s, P))
+
+
+def to_named(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda s: isinstance(s, P))

@@ -1,0 +1,28 @@
+"""Pallas TPU kernels for DPIFrame hot spots, with pure-jnp oracles.
+
+  multi_table_lookup.py  fused embedding gather (paper Alg. 1)  [C2, C3]
+  fused_cross.py         DCN/DCNv2 cross elementwise tails      [C5]
+  fused_fm.py            DeepFM FM 2nd-order term               [C5]
+  ops.py                 public wrappers + strategy dispatch
+  ref.py                 reference oracles (incl. literal Alg. 1)
+"""
+
+from .ops import (
+    fused_cross_v1,
+    fused_cross_v2,
+    fused_fm_second_order,
+    multi_table_lookup,
+    multi_table_lookup_multihot,
+    multi_table_lookup_onehot,
+    on_tpu,
+)
+
+__all__ = [
+    "fused_cross_v1",
+    "fused_cross_v2",
+    "fused_fm_second_order",
+    "multi_table_lookup",
+    "multi_table_lookup_multihot",
+    "multi_table_lookup_onehot",
+    "on_tpu",
+]

@@ -1,0 +1,220 @@
+"""Pallas TPU kernels for DPIFrame's multi-table embedding lookup (Alg. 1).
+
+TPU adaptation of the paper's GPU design (DESIGN.md §2):
+
+* GPU: one CUDA *thread* per output element, output-first allocation so a
+  warp's 32 threads write coalesced addresses.
+* TPU: one Pallas *program* per output row. The k per-field tables are
+  concatenated into a single HBM-resident mega-table; the per-program block
+  to fetch is selected by a ``PrefetchScalarGridSpec`` index_map that reads
+  the (scalar-prefetched) global row id — this is the TPU analogue of the
+  in-thread ``emb_row`` computation in Alg. 1 lines 6–8. Output blocks map
+  1:1 to grid steps, so writes are perfectly sequential (output-first, C3).
+
+Three production variants + one strawman:
+
+  ``mtl_gather``       output-first row gather (the paper's algorithm).
+  ``mtl_gather_multihot`` same, pooling h hot ids per field via output-block
+                       revisiting across the innermost grid axis.
+  ``mtl_onehot``       TPU-only alternative with *no GPU analogue*: small
+                       fields are batched into a dense ``one_hot(ids) @ table``
+                       executed on the MXU — turns the irregular gather into
+                       a systolic matmul (used by ops.py for fields whose
+                       table fits VMEM).
+  ``mtl_input_first``  the paper's Fig.-11 strawman: grid ordered by *input*
+                       (field-major output layout) so consecutive programs
+                       write strided addresses; needs a final transpose pass.
+
+All kernels are validated in ``interpret=True`` mode against
+``repro.kernels.ref`` oracles (tests/test_kernels.py).
+
+NOTE on tiling: blocks here are (1, d). On a real v5e the fp32 minimum tile
+is (8, 128); production would sort ids and batch 8 rows per program — the
+(1, d) form keeps the algorithm exact for arbitrary d and is what we can
+validate on CPU. The roofline accounting in analysis/ uses the HBM-bytes
+model, which is tiling-independent.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# ---------------------------------------------------------------------------
+# Output-first fused gather (the paper's Algorithm 1, C2 + C3)
+# ---------------------------------------------------------------------------
+
+def _copy_row_kernel(ids_ref, table_ref, out_ref):
+    # ids_ref is the scalar-prefetch operand; the gather itself already
+    # happened in the BlockSpec index_map, so the body is a VMEM row copy.
+    del ids_ref
+    out_ref[...] = table_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def mtl_gather(flat_rows: jax.Array, mega_table: jax.Array, *,
+               interpret: bool = False) -> jax.Array:
+    """Output-first fused multi-table gather.
+
+    Args:
+        flat_rows:  (R,) int32 *global* row ids into the mega-table
+                    (= per-field id + table offset, precomputed).
+        mega_table: (N, d) all tables concatenated along rows.
+
+    Returns:
+        (R, d) gathered rows; caller reshapes (b*k, d) -> (b, k*d).
+    """
+    r = flat_rows.shape[0]
+    d = mega_table.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(r,),
+        in_specs=[pl.BlockSpec((1, d), lambda p, ids: (ids[p], 0))],
+        out_specs=pl.BlockSpec((1, d), lambda p, ids: (p, 0)),
+    )
+    return pl.pallas_call(
+        _copy_row_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((r, d), mega_table.dtype),
+        interpret=interpret,
+    )(flat_rows, mega_table)
+
+
+# ---------------------------------------------------------------------------
+# Multi-hot pooling variant (sequence features, Alg. 1 "offset information")
+# ---------------------------------------------------------------------------
+
+def _pool_row_kernel(ids_ref, table_ref, out_ref):
+    del ids_ref
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = table_ref[...]
+
+    @pl.when(j > 0)
+    def _acc():
+        out_ref[...] += table_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("hot", "interpret"))
+def mtl_gather_multihot(flat_rows: jax.Array, mega_table: jax.Array, *,
+                        hot: int, interpret: bool = False) -> jax.Array:
+    """Pooled (sum) gather of ``hot`` ids per output row.
+
+    Invalid slots must be pre-redirected to an all-zero row of the mega-table
+    (ops.py appends one), which realizes the 0/1 validity mask without any
+    in-kernel branching — masking by address, the TPU-friendly form.
+
+    Args:
+        flat_rows:  (R*hot,) int32 global rows, row-major per output row.
+        mega_table: (N, d), last row all-zero.
+
+    Returns:
+        (R, d) pooled rows.
+    """
+    rh = flat_rows.shape[0]
+    r = rh // hot
+    d = mega_table.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(r, hot),
+        in_specs=[pl.BlockSpec((1, d), lambda p, j, ids: (ids[p * hot + j], 0))],
+        out_specs=pl.BlockSpec((1, d), lambda p, j, ids: (p, 0)),
+    )
+    return pl.pallas_call(
+        _pool_row_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((r, d), mega_table.dtype),
+        interpret=interpret,
+    )(flat_rows, mega_table)
+
+
+# ---------------------------------------------------------------------------
+# One-hot MXU variant (TPU-only; no GPU analogue)
+# ---------------------------------------------------------------------------
+
+def _onehot_kernel(ids_ref, table_ref, out_ref):
+    # ids_ref:   (bm, 1) int32 local ids for this (batch-tile, field)
+    # table_ref: (1, n_pad, d) this field's (padded) table
+    # out_ref:   (bm, 1, d)
+    n_pad = table_ref.shape[1]
+    ids = ids_ref[...]                                        # (bm, 1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (ids.shape[0], n_pad), 1)
+    onehot = (iota == ids).astype(table_ref.dtype)            # (bm, n_pad)
+    # MXU matmul: (bm, n_pad) @ (n_pad, d)
+    out = jnp.dot(onehot, table_ref[0], preferred_element_type=jnp.float32)
+    out_ref[...] = out[:, None, :].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def mtl_onehot(ids: jax.Array, stacked_tables: jax.Array, *,
+               block_b: int = 128, interpret: bool = False) -> jax.Array:
+    """Dense one-hot matmul lookup for small fields.
+
+    Args:
+        ids:            (b, k) int32 local ids (each < n_pad).
+        stacked_tables: (k, n_pad, d) small tables padded to a common height.
+
+    Returns:
+        (b, k, d) embedding output.
+    """
+    b, k = ids.shape
+    _, n_pad, d = stacked_tables.shape
+    bm = min(block_b, b)
+    grid = (pl.cdiv(b, bm), k)
+    return pl.pallas_call(
+        _onehot_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, 1), lambda i, f: (i, f)),
+            pl.BlockSpec((1, n_pad, d), lambda i, f: (f, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, 1, d), lambda i, f: (i, f, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, k, d), stacked_tables.dtype),
+        interpret=interpret,
+    )(ids, stacked_tables)
+
+
+# ---------------------------------------------------------------------------
+# Input-first strawman (paper Fig. 11 ablation)
+# ---------------------------------------------------------------------------
+
+def _copy_row_3d_kernel(ids_ref, table_ref, out_ref):
+    del ids_ref
+    out_ref[...] = table_ref[...][None]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def mtl_input_first(flat_rows: jax.Array, mega_table: jax.Array, *,
+                    k: int, interpret: bool = False) -> jax.Array:
+    """Input-first allocation: programs ordered by input sample.
+
+    Consecutive programs write to a *field-major* (k, b, d) output — a
+    stride of b·d elements between successive writes (the TPU reflection of
+    the GPU's uncoalesced-warp penalty) — and a final transpose pass
+    restores (b, k*d). Exists only to reproduce the Fig.-11 comparison.
+    """
+    r = flat_rows.shape[0]
+    b = r // k
+    d = mega_table.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, k),                       # input-sample-major traversal
+        in_specs=[pl.BlockSpec((1, d), lambda s, f, ids: (ids[s * k + f], 0))],
+        # field-major output: consecutive inner steps jump b rows apart
+        out_specs=pl.BlockSpec((1, 1, d), lambda s, f, ids: (f, s, 0)),
+    )
+    out_fmajor = pl.pallas_call(
+        _copy_row_3d_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((k, b, d), mega_table.dtype),
+        interpret=interpret,
+    )(flat_rows, mega_table)
+    # the extra reorganization pass input-first designs pay for:
+    return jnp.transpose(out_fmajor, (1, 0, 2)).reshape(b, k * d)

@@ -1,0 +1,133 @@
+"""Public jit'd wrappers for the DPIFrame kernels, with strategy dispatch.
+
+The wrappers hide the backend question: on a TPU the Pallas kernels run
+compiled; on this CPU container the same math runs either through
+``interpret=True`` (kernel-body validation) or through the vectorized jnp
+fused path (identical algorithm at the XLA level — one gather over the
+mega-table — which is what the CPU benchmarks time).
+
+Strategies for ``multi_table_lookup``:
+
+  "auto"        pallas on TPU, jnp-fused elsewhere
+  "pallas"      output-first Pallas gather (Alg. 1)          [C2+C3]
+  "onehot"      one-hot MXU matmul (small fields)            [TPU-native]
+  "jnp"         vectorized single-gather over the mega-table [C2 at XLA level]
+  "serial"      per-field loop + concat (the paper's PyTorch baseline)
+  "input_first" Fig.-11 strawman (field-major writes + transpose)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .fused_cross import fused_cross_v1, fused_cross_v2
+from .fused_fm import fused_fm_second_order
+from .multi_table_lookup import (
+    mtl_gather,
+    mtl_gather_multihot,
+    mtl_input_first,
+    mtl_onehot,
+)
+
+__all__ = [
+    "multi_table_lookup",
+    "multi_table_lookup_multihot",
+    "fused_cross_v1",
+    "fused_cross_v2",
+    "fused_fm_second_order",
+    "on_tpu",
+]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _flat_rows(ids: jax.Array, offsets: jax.Array) -> jax.Array:
+    """Alg. 1 lines 6–7 vectorized: local id -> global mega-table row."""
+    return (ids.astype(jnp.int32) + offsets[None, :].astype(jnp.int32)).reshape(-1)
+
+
+def multi_table_lookup(ids: jax.Array, mega_table: jax.Array,
+                       offsets: jax.Array, *, strategy: str = "auto",
+                       interpret: bool | None = None) -> jax.Array:
+    """Fused multi-table embedding lookup (paper Algorithm 1).
+
+    Args:
+        ids:        (b, k) int32 per-field local ids.
+        mega_table: (N, d) concatenated tables.
+        offsets:    (k,) int32 starting row of each table.
+        strategy:   see module docstring.
+        interpret:  force Pallas interpret mode (defaults to not-on-TPU).
+
+    Returns:
+        (b, k*d) embedding output.
+    """
+    b, k = ids.shape
+    d = mega_table.shape[1]
+    if interpret is None:
+        interpret = not on_tpu()
+    if strategy == "auto":
+        strategy = "pallas" if on_tpu() else "jnp"
+
+    if strategy == "jnp":
+        return ref.ref_multi_table_lookup(ids, mega_table, offsets, k)
+    if strategy == "pallas":
+        rows = _flat_rows(ids, offsets)
+        return mtl_gather(rows, mega_table, interpret=interpret).reshape(b, k * d)
+    if strategy == "input_first":
+        rows = _flat_rows(ids, offsets)
+        return mtl_input_first(rows, mega_table, k=k, interpret=interpret)
+    if strategy == "serial":
+        # reconstruct per-field tables views (baseline semantics; the extra
+        # slicing is free under jit — the k separate gathers are the cost)
+        sizes = jnp.diff(jnp.concatenate([offsets, jnp.array([mega_table.shape[0]])]))
+        del sizes  # views below keep it simple: slice lazily per field
+        cols = []
+        for i in range(k):
+            cols.append(jnp.take(mega_table, ids[:, i] + offsets[i], axis=0))
+        return jnp.concatenate(cols, axis=1)
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
+def multi_table_lookup_onehot(ids: jax.Array, stacked_tables: jax.Array, *,
+                              interpret: bool | None = None) -> jax.Array:
+    """One-hot MXU lookup for small-field groups. Returns (b, k, d)."""
+    if interpret is None:
+        interpret = not on_tpu()
+    return mtl_onehot(ids, stacked_tables, interpret=interpret)
+
+
+def multi_table_lookup_multihot(ids: jax.Array, mask: jax.Array,
+                                mega_table: jax.Array, offsets: jax.Array, *,
+                                strategy: str = "auto",
+                                interpret: bool | None = None) -> jax.Array:
+    """Multi-hot (pooled) fused lookup.
+
+    Args:
+        ids:        (b, k, h) local ids; invalid slots arbitrary.
+        mask:       (b, k, h) 1 for valid slots, 0 otherwise.
+        mega_table: (N, d) concatenated tables **with a trailing all-zero
+                    row** at index N-1 (ops appends it in FusedEmbedding).
+        offsets:    (k,) table starts.
+
+    Returns:
+        (b, k*d) pooled output.
+    """
+    b, k, h = ids.shape
+    d = mega_table.shape[1]
+    if interpret is None:
+        interpret = not on_tpu()
+    if strategy == "auto":
+        strategy = "pallas" if on_tpu() else "jnp"
+    if strategy == "jnp":
+        return ref.ref_multi_hot_lookup(ids, mask, mega_table, offsets)
+    if strategy == "pallas":
+        zero_row = mega_table.shape[0] - 1
+        rows = ids.astype(jnp.int32) + offsets[None, :, None].astype(jnp.int32)
+        rows = jnp.where(mask.astype(bool), rows, zero_row).reshape(-1)
+        out = mtl_gather_multihot(rows, mega_table, hot=h, interpret=interpret)
+        return out.reshape(b, k * d)
+    raise ValueError(f"unknown strategy {strategy!r}")

@@ -1,0 +1,6 @@
+"""Launch surface: mesh construction, per-cell step builders, dry-run CLI,
+train/serve drivers."""
+
+from .mesh import make_production_mesh, make_test_mesh
+
+__all__ = ["make_production_mesh", "make_test_mesh"]

@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+Single pod:  (data=16, model=16)             = 256 chips (v5e pod)
+Multi-pod :  (pod=2, data=16, model=16)      = 512 chips
+
+Defined as a FUNCTION so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS *before* any jax import; everything else
+sees the real single-CPU device).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_test_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(data: int = 2, model: int = 2,
+                   pod: int | None = None) -> jax.sharding.Mesh:
+    """Small mesh for CI-scale sharding tests (requires
+    --xla_force_host_platform_device_count >= data*model*(pod or 1))."""
+    if pod:
+        return jax.make_mesh(
+            (pod, data, model), ("pod", "data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,245 @@
+"""Uniform step functions per (arch × shape-kind), mesh-aware.
+
+Adapters flatten per-family signature differences into
+``step(state_or_params, inputs_dict)`` so the dry-run, trainer, and server
+share one calling convention keyed by ``repro.configs.input_specs``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, input_specs
+from repro.distributed import sharding as shd
+from repro.models.lm import make_lm_model
+from repro.models.lm import layers as LD
+from repro.training.optimizer import (AdamWConfig, TrainState, adamw_init,
+                                      adamw_update)
+
+__all__ = ["build_cell", "Cell"]
+
+
+class Cell:
+    """Everything needed to lower one (arch × shape × mesh) cell."""
+
+    def __init__(self, arch: str, shape: str, mesh, policy: str = "auto"):
+        self.arch = arch
+        self.shape = shape
+        self.mesh = mesh
+        self.cfg = get_config(arch)
+        self.cell = SHAPES[shape]
+        if policy == "auto":
+            # H2: dense-family training is collective-bound under TP
+            # (per-layer activation all-reduces); pure FSDP halves the
+            # collective term and goes compute-bound — but its backward
+            # keeps an unsharded stacked weight-grad buffer (EXPERIMENTS
+            # §Perf H2), so it is the default only where the compiled
+            # footprint was measured to fit v5e HBM.
+            fsdp_ok = arch in ("granite-8b", "smollm-360m", "whisper-small")
+            grid = mesh.shape.get("data", 1) * mesh.shape.get("model", 1)
+            policy = ("fsdp" if fsdp_ok and self.cell.kind == "train"
+                      and self.cell.batch % grid == 0 else "tp_fsdp")
+        self.policy = policy
+        self.shard = shd.make_shard_fn(mesh, policy)
+        self.model = make_lm_model(self.cfg, self.shard)
+        self.inputs_sds = input_specs(arch, shape)
+
+        if self.cell.kind == "decode" and self.cfg.family != "ssm":
+            # H1: distributed flash-decode over the seq-sharded KV cache
+            # (without this, GSPMD all-gathers the cache per layer)
+            baxes = shd.mesh_batch_axes(mesh)
+            nb = 1
+            for a in baxes:
+                nb *= mesh.shape[a]
+            b_ax = (baxes if len(baxes) > 1 else baxes[0]) \
+                if self.cell.batch % max(nb, 1) == 0 else None
+            self.model.decode_ctx = LD.DecodeShardCtx(
+                mesh=mesh, batch_axes=b_ax, seq_axis="model")
+
+        pshapes = jax.eval_shape(
+            lambda: self.model.init(jax.random.PRNGKey(0)))
+        self.param_shapes = pshapes
+        pspecs = shd.param_specs(self.cfg.family, pshapes, self.cfg)
+        if self.policy == "fsdp":
+            pspecs = shd.fsdp_param_specs(pspecs)
+        if self.cell.kind == "decode":
+            # H1b: serving keeps weights TP-only — FSDP over data would
+            # all-gather every weight every step — unless the TP shard
+            # itself exceeds HBM (llama4's 772B experts), where streamed
+            # weight gathering is the only option on one pod.
+            import numpy as _np
+            pbytes = sum(int(_np.prod(x.shape)) * x.dtype.itemsize
+                         for x in jax.tree.leaves(pshapes))
+            if pbytes / mesh.shape.get("model", 1) <= 8 * 2**30:
+                pspecs = shd.drop_axis(pspecs, "data")
+        self.pspecs = shd.fit_spec_tree(mesh, pspecs, pshapes)
+
+        # optimizer-state compression for the very large archs
+        big = sum(int(jnp.prod(jnp.asarray(x.shape)))
+                  for x in jax.tree.leaves(pshapes)) > 30_000_000_000
+        self.opt_cfg = AdamWConfig(
+            state_dtype="bfloat16" if big else "float32")
+        self.n_micro = self._choose_microbatches()
+
+    def _choose_microbatches(self) -> int:
+        """Gradient-accumulation depth so the remat-scan activation carry
+        fits comfortably (§Perf M3): target ≤ ~4 GiB of (b·s·d·2B·L) per
+        device. Restricted to power-of-2 divisors of the per-device batch."""
+        if self.cell.kind != "train":
+            return 1
+        cfg, cell = self.cfg, self.cell
+        data_shards = 1
+        for a in self._batch_axes():
+            data_shards *= self.mesh.shape[a]
+        local_b = max(cell.batch // data_shards, 1)
+        l_eff = cfg.n_layers + cfg.encoder_layers   # enc-dec counts both
+        carry_bytes = (local_b * cell.seq * cfg.d_model * 2
+                       * max(l_eff, 1))
+        n = 1
+        while (carry_bytes / n > 4 * 2**30 and n < local_b
+               and local_b % (n * 2) == 0):
+            n *= 2
+        return n
+
+    # -- shardings --------------------------------------------------------------
+    def state_shapes(self):
+        return jax.eval_shape(
+            functools.partial(adamw_init, cfg=self.opt_cfg),
+            self.param_shapes)
+
+    def state_specs(self):
+        return TrainState(step=P(), params=self.pspecs,
+                          m=self.pspecs, v=self.pspecs)
+
+    def _batch_axes(self) -> tuple[str, ...]:
+        if self.policy == "fsdp":
+            return tuple(a for a in ("data", "model")
+                         if a in self.mesh.axis_names)
+        return shd.mesh_batch_axes(self.mesh)
+
+    def input_shardspecs(self):
+        baxes = self._batch_axes()
+        b = baxes if len(baxes) > 1 else baxes[0]
+        specs = {}
+        for k, v in self.inputs_sds.items():
+            if k == "cache":
+                specs[k] = shd.cache_specs(self.cfg.family, self.mesh, v)
+            else:
+                specs[k] = jax.tree.map(
+                    lambda x: shd.P(*([b] + [None] * (x.ndim - 1))), v)
+            specs[k] = shd.fit_spec_tree(self.mesh, specs[k], v)
+        return specs
+
+    # -- step functions -----------------------------------------------------------
+    def train_step_fn(self) -> Callable:
+        model, opt_cfg, n_micro = self.model, self.opt_cfg, self.n_micro
+        gspecs = shd.to_named(self.mesh, self.pspecs)
+
+        def train_step(state: TrainState, batch: dict):
+            if n_micro == 1:
+                loss, grads = jax.value_and_grad(model.loss)(
+                    state.params, batch)
+            else:
+                # gradient accumulation over microbatches (scan keeps HLO
+                # O(1) in n_micro; grads accumulate in f32, sharded like
+                # their parameters)
+                micro = jax.tree.map(
+                    lambda x: x.reshape(n_micro, x.shape[0] // n_micro,
+                                        *x.shape[1:]), batch)
+                g0 = jax.tree.map(
+                    lambda p, s: jax.lax.with_sharding_constraint(
+                        jnp.zeros(p.shape, jnp.float32), s),
+                    state.params, gspecs)
+
+                def acc(carry, mb):
+                    loss_sum, g = carry
+                    l, gi = jax.value_and_grad(model.loss)(state.params, mb)
+                    g = jax.tree.map(
+                        lambda a, b: a + b.astype(jnp.float32), g, gi)
+                    return (loss_sum + l, g), None
+
+                (loss, grads), _ = jax.lax.scan(
+                    acc, (jnp.zeros((), jnp.float32), g0), micro)
+                loss = loss / n_micro
+                grads = jax.tree.map(lambda g: g / n_micro, grads)
+            state, metrics = adamw_update(state, grads, opt_cfg)
+            return state, {"loss": loss, **metrics}
+        return train_step
+
+    def prefill_fn(self) -> Callable:
+        model, cfg, cell = self.model, self.cfg, self.cell
+
+        def prefill(params, inputs: dict):
+            tokens = inputs["tokens"]
+            b = tokens.shape[0]
+            if cfg.family == "encdec":
+                cache = model.init_cache(b, cell.seq,
+                                         inputs["frames"].shape[1])
+                return model.prefill(params, tokens, inputs["frames"], cache)
+            if cfg.family == "vlm":
+                s_total = tokens.shape[1] + inputs["patch_embeds"].shape[1]
+                cache = model.init_cache(b, s_total)
+                return model.prefill(params, tokens, cache,
+                                     patch_embeds=inputs["patch_embeds"])
+            if cfg.family == "ssm":
+                cache = model.init_cache(b, 0)
+                return model.prefill(params, tokens, cache)
+            cache = model.init_cache(b, cell.seq)
+            return model.prefill(params, tokens, cache)
+        return prefill
+
+    def decode_fn(self) -> Callable:
+        model = self.model
+
+        def serve_step(params, inputs: dict):
+            return model.decode_step(params, inputs["tokens"],
+                                     inputs["cache"])
+        return serve_step
+
+    # -- lowering -----------------------------------------------------------------
+    def lower(self):
+        """Returns (lowered, kind)."""
+        mesh = self.mesh
+        named = lambda t: shd.to_named(mesh, t)
+        if self.cell.kind == "train":
+            step = self.train_step_fn()
+            st_sds = self.state_shapes()
+            st_named = named(
+                jax.tree.map(lambda s: s, self.state_specs(),
+                             is_leaf=lambda s: isinstance(s, P)))
+            in_named = named(self.input_shardspecs())
+            with mesh:
+                lowered = jax.jit(
+                    step,
+                    in_shardings=(st_named, in_named),
+                    out_shardings=(st_named, None),
+                    donate_argnums=(0,),
+                ).lower(st_sds, self.inputs_sds)
+            return lowered, "train"
+        if self.cell.kind == "prefill":
+            step = self.prefill_fn()
+            in_named = named(self.input_shardspecs())
+            with mesh:
+                lowered = jax.jit(
+                    step,
+                    in_shardings=(named(self.pspecs), in_named),
+                ).lower(self.param_shapes, self.inputs_sds)
+            return lowered, "prefill"
+        step = self.decode_fn()
+        in_named = named(self.input_shardspecs())
+        with mesh:
+            lowered = jax.jit(
+                step,
+                in_shardings=(named(self.pspecs), in_named),
+                donate_argnums=(1,),
+            ).lower(self.param_shapes, self.inputs_sds)
+        return lowered, "decode"
+
+
+def build_cell(arch: str, shape: str, mesh) -> Cell:
+    return Cell(arch, shape, mesh)

@@ -1,0 +1,2 @@
+"""Model zoos: paper CTR models (repro.models.ctr) + assigned LM
+architectures (repro.models.lm)."""

@@ -1,0 +1,204 @@
+"""Shared pieces of the CTR model zoo: inits, MLP op emission, kernel hooks.
+
+Every model exposes the same interface (``CTRModel``):
+
+  spec             CTRModelSpec (embedding schema + net sizes)
+  init(key)        -> params pytree
+  build_graph(params, level) -> OpGraph   (consumed by DualParallelExecutor)
+  apply(params, ids) -> logits (b, 1)     (differentiable forward = the
+                                           graph at "dual" semantics; used
+                                           by the trainer)
+  loss(params, batch) -> scalar BCE
+
+Graph modules: "embedding" -> ("explicit" ∥ "implicit") -> "head", matching
+the paper's decomposition, with GEMMs flagged and non-GEMM tails carrying
+``fused_hint`` so the C5 pass can swap in the Pallas kernels.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import FusedEmbeddingCollection, FusedEmbeddingSpec, Op, OpGraph
+from repro.core.opgraph import register_fused_kernel
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+__all__ = ["CTRModelSpec", "CTRModel", "init_dense", "mlp_init",
+           "emit_embedding_ops", "emit_mlp_ops", "bce_loss"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CTRModelSpec:
+    """Static CTR model description (paper §V-A configuration space)."""
+    name: str
+    field_sizes: tuple[int, ...]
+    embed_dim: int = 16                      # paper: 16 / 32
+    hidden: tuple[int, ...] = (256, 256, 256)  # paper: 256/512/1024 ×3
+    cross_layers: int = 3                    # paper: 3 (DCN/DCNv2)
+    dtype: str = "float32"
+
+    @property
+    def k(self) -> int:
+        return len(self.field_sizes)
+
+    @property
+    def input_dim(self) -> int:
+        return self.k * self.embed_dim
+
+    def embedding_spec(self) -> FusedEmbeddingSpec:
+        return FusedEmbeddingSpec(field_sizes=self.field_sizes,
+                                  dim=self.embed_dim, dtype=self.dtype)
+
+    def wide_spec(self) -> FusedEmbeddingSpec:
+        """d=1 tables for linear terms (Wide&Deep / FM first order)."""
+        return FusedEmbeddingSpec(field_sizes=self.field_sizes, dim=1,
+                                  dtype=self.dtype)
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def init_dense(key, fan_in: int, fan_out: int, dtype) -> dict:
+    scale = np.sqrt(2.0 / (fan_in + fan_out))
+    w = jax.random.normal(key, (fan_in, fan_out), dtype=dtype) * scale
+    return {"w": w, "b": jnp.zeros((fan_out,), dtype=dtype)}
+
+
+def mlp_init(key, dims: tuple[int, ...], dtype) -> list[dict]:
+    keys = jax.random.split(key, len(dims) - 1)
+    return [init_dense(k, dims[i], dims[i + 1], dtype)
+            for i, k in enumerate(keys)]
+
+
+# ---------------------------------------------------------------------------
+# graph emission helpers
+# ---------------------------------------------------------------------------
+
+def emit_embedding_ops(g: OpGraph, emb: FusedEmbeddingCollection,
+                       params: dict, level: str, *, out: str = "x_embed",
+                       prefix: str = "emb") -> None:
+    """Embedding module ops. ``naive`` = k serial gathers + concat (the
+    baseline the paper measures against); otherwise ONE fused lookup."""
+    if level == "naive":
+        k = emb.spec.k
+        offs = emb.spec.offsets
+        for i in range(k):
+            def one_field(ids, _i=i, _o=int(offs[i])):
+                return jnp.take(params[f"{prefix}_mega"],
+                                ids[:, _i] + _o, axis=0)
+            g.add(Op(f"{prefix}_lookup_{i}", one_field, ("ids",),
+                     f"{prefix}_f{i}", module="embedding"))
+        g.add(Op(f"{prefix}_concat",
+                 lambda *cols: jnp.concatenate(cols, axis=1),
+                 tuple(f"{prefix}_f{i}" for i in range(k)),
+                 out, module="embedding"))
+    else:
+        g.add(Op(f"{prefix}_fused",
+                 lambda ids: emb.apply({"mega_table": params[f"{prefix}_mega"]},
+                                       ids),
+                 ("ids",), out, module="embedding"))
+
+
+def emit_mlp_ops(g: OpGraph, layers: list[dict], src: str, module: str,
+                 prefix: str = "mlp", final_act: bool = False) -> str:
+    """Per-layer GEMM (flagged) + ReLU (non-GEMM, fusable)."""
+    cur = src
+    n = len(layers)
+    for li, layer in enumerate(layers):
+        w, b = layer["w"], layer["b"]
+        g.add(Op(f"{prefix}_gemm{li}",
+                 lambda h, _w=w, _b=b: h @ _w + _b,
+                 (cur,), f"{prefix}_h{li}", is_gemm=True, module=module))
+        cur = f"{prefix}_h{li}"
+        if li < n - 1 or final_act:
+            g.add(Op(f"{prefix}_relu{li}",
+                     lambda h: jnp.maximum(h, 0),
+                     (cur,), f"{prefix}_a{li}", module=module,
+                     fused_hint="relu"))
+            cur = f"{prefix}_a{li}"
+    return cur
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def bce_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Numerically-stable binary cross entropy from logits."""
+    logits = logits.reshape(-1).astype(jnp.float32)
+    labels = labels.reshape(-1).astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logits, 0) - logits * labels +
+                    jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel registration for the C5 pattern registry
+# ---------------------------------------------------------------------------
+
+def _dispatch(pallas_fn: Callable, jnp_fn: Callable) -> Callable:
+    """Use the Pallas kernel on TPU, identical jnp math elsewhere (the CPU
+    benchmarks must not time interpret mode)."""
+    def f(*args):
+        if kops.on_tpu():
+            return pallas_fn(*args)
+        return jnp_fn(*args)
+    return f
+
+
+def _cross_v2_tail(x0, xw, x=None):
+    # layer 0 dedups x_l == x0 into a 2-arg call
+    if x is None:
+        x = x0
+    if kops.on_tpu():
+        return kops.fused_cross_v2(x0, xw, x)
+    return kref.ref_cross_v2_elementwise(x0, xw, x)
+
+
+register_fused_kernel("cross_v2_tail", _cross_v2_tail)
+
+register_fused_kernel(
+    "fm_second_order",
+    _dispatch(lambda v: kops.fused_fm_second_order(v),
+              lambda v: kref.ref_fm_second_order(v)[:, None]))
+
+
+# ---------------------------------------------------------------------------
+# model base
+# ---------------------------------------------------------------------------
+
+class CTRModel:
+    """Base: shares embedding init + trainer-facing apply/loss."""
+
+    def __init__(self, spec: CTRModelSpec):
+        self.spec = spec
+        self.embedding = FusedEmbeddingCollection(spec.embedding_spec())
+
+    # subclasses fill these in -------------------------------------------------
+    def init(self, key: jax.Array) -> dict:
+        raise NotImplementedError
+
+    def build_graph(self, params: dict, level: str) -> OpGraph:
+        raise NotImplementedError
+
+    # shared -------------------------------------------------------------------
+    def apply(self, params: dict, ids: jax.Array) -> jax.Array:
+        """Differentiable forward = whole graph in breadth-first order."""
+        g = self.build_graph(params, "dual")
+        env = g.execute({"ids": ids})
+        return env["logit"]
+
+    def predict_proba(self, params: dict, ids: jax.Array) -> jax.Array:
+        return jax.nn.sigmoid(self.apply(params, ids).reshape(-1))
+
+    def loss(self, params: dict, batch: dict) -> jax.Array:
+        return bce_loss(self.apply(params, batch["ids"]), batch["labels"])
+
+    def n_params(self, params: dict) -> int:
+        return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))

@@ -1,0 +1,70 @@
+"""DCNv2 (Wang et al. 2021): cross network with full-matrix projection.
+
+Explicit branch: x_{l+1} = x0 ⊙ (W_l x_l + b_l) + x_l — the W_l GEMM feeds
+the elementwise tail fused by C5 into the ``cross_v2_tail`` Pallas kernel
+(bias lives inside the GEMM op, so one global hint serves every layer).
+Implicit branch: deep MLP. Head: concat → linear → logit.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Op, OpGraph
+
+from .common import (CTRModel, emit_embedding_ops, emit_mlp_ops, init_dense,
+                     mlp_init)
+
+
+class DCNv2(CTRModel):
+    def init(self, key: jax.Array) -> dict:
+        spec = self.spec
+        dtype = jnp.dtype(spec.dtype)
+        keys = jax.random.split(key, 3 + spec.cross_layers)
+        d_in = spec.input_dim
+        params: dict = {
+            "emb_mega": self.embedding.init(keys[0])["mega_table"],
+            "mlp": mlp_init(keys[1], (d_in, *spec.hidden), dtype),
+            "head": init_dense(keys[2], d_in + spec.hidden[-1], 1, dtype),
+            "cross": [init_dense(keys[3 + li], d_in, d_in, dtype)
+                      for li in range(spec.cross_layers)],
+        }
+        return params
+
+    def build_graph(self, params: dict, level: str) -> OpGraph:
+        g = OpGraph(["ids"])
+        emit_embedding_ops(g, self.embedding, params, level)
+
+        # explicit: cross network v2
+        cur = "x_embed"
+        n_layers = len(params["cross"])
+        for li, layer in enumerate(params["cross"]):
+            w, b = layer["w"], layer["b"]
+            g.add(Op(f"cross_gemm{li}",
+                     lambda x, _w=w, _b=b: x @ _w + _b,
+                     (cur,), f"xw{li}", is_gemm=True, module="explicit"))
+            out_edge = ("explicit_out" if li == n_layers - 1
+                        else f"x_cross{li}")
+            g.add(Op(f"cross_mul{li}",
+                     lambda x0, xw: x0 * xw,
+                     ("x_embed", f"xw{li}"), f"cm{li}",
+                     module="explicit", fused_hint="cross_v2_tail"))
+            g.add(Op(f"cross_res{li}",
+                     lambda m, x: m + x,
+                     (f"cm{li}", cur), out_edge,
+                     module="explicit", fused_hint="cross_v2_tail"))
+            cur = out_edge
+
+        # implicit: deep MLP
+        deep_out = emit_mlp_ops(g, params["mlp"], "x_embed", "implicit",
+                                prefix="deep", final_act=True)
+
+        # head
+        hw, hb = params["head"]["w"], params["head"]["b"]
+        g.add(Op("head_concat",
+                 lambda a, b_: jnp.concatenate([a, b_], axis=1),
+                 ("explicit_out", deep_out), "stacked", module="head"))
+        g.add(Op("head_gemm", lambda h: h @ hw + hb, ("stacked",),
+                 "logit", is_gemm=True, module="head"))
+        return g

@@ -1,0 +1,32 @@
+"""Assigned-architecture LM zoo.
+
+Families: dense GQA decoder, capacity-routed MoE, RWKV6 (attention-free),
+Zamba2 (Mamba2 + shared attention), Whisper (enc-dec), Pixtral (VLM).
+"""
+
+from .config import LMConfig
+from .moe import MoETransformer
+from .pixtral import Pixtral
+from .rwkv6 import RWKV6
+from .transformer import DenseTransformer
+from .whisper import Whisper
+from .zamba2 import Zamba2
+
+FAMILY_CLASSES = {
+    "dense": DenseTransformer,
+    "moe": MoETransformer,
+    "ssm": RWKV6,
+    "hybrid": Zamba2,
+    "encdec": Whisper,
+    "vlm": Pixtral,
+}
+
+
+def make_lm_model(cfg: LMConfig, shard=None):
+    cls = FAMILY_CLASSES[cfg.family]
+    from . import layers as L
+    return cls(cfg, shard or L.no_shard)
+
+
+__all__ = ["LMConfig", "DenseTransformer", "MoETransformer", "RWKV6",
+           "Zamba2", "Whisper", "Pixtral", "FAMILY_CLASSES", "make_lm_model"]

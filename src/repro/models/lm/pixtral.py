@@ -1,0 +1,52 @@
+"""Pixtral-12B backbone — mistral-nemo-style decoder with a vision-token
+prefix. The Pixtral ViT frontend is a STUB per the assignment:
+``input_specs()`` supplies precomputed patch embeddings (b, s_img, d_model)
+which are concatenated ahead of the text embeddings; everything downstream
+is the dense GQA decoder (explicit head_dim=128 ≠ d_model/n_heads, as in
+mistral-nemo).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .config import LMConfig
+from .transformer import DenseTransformer
+
+
+class Pixtral(DenseTransformer):
+    """DenseTransformer consuming [patch_embeds; text tokens]."""
+
+    def fuse_inputs(self, params, tokens, patch_embeds):
+        """(b, s_txt) tokens + (b, s_img, d) patches -> (b, s_img+s_txt, d)."""
+        tx = self.embed_tokens(params, tokens)
+        x = jnp.concatenate([patch_embeds.astype(tx.dtype), tx], axis=1)
+        return self.shard(x, ("batch", "seq", "embed"))
+
+    def forward(self, params, tokens, patch_embeds=None, positions=None):
+        if patch_embeds is None:
+            return super().forward(params, tokens, positions)
+        x = self.fuse_inputs(params, tokens, patch_embeds)
+        return self.forward_from_x(params, x, positions)
+
+    def loss(self, params, batch):
+        """Sequence-chunked next-token loss on the text region only."""
+        pe = batch.get("patch_embeds")
+        if pe is None:
+            return super().loss(params, batch)
+        x = self.fuse_inputs(params, batch["tokens"], pe)
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)[None, :]
+        x = self._run_layers(params, x, positions)
+        x_txt = x[:, pe.shape[1]:]
+        return L.chunked_ce_loss(x_txt, params["final_norm"],
+                                 self.head_weight(params), batch["tokens"],
+                                 shard=self.shard)
+
+    def prefill(self, params, tokens, cache, patch_embeds=None):
+        if patch_embeds is None:
+            return super().prefill(params, tokens, cache)
+        x = self.fuse_inputs(params, tokens, patch_embeds)
+        return self.prefill_from_x(params, x, cache)
+    # decode_step: inherited — text tokens decode against the joint cache.

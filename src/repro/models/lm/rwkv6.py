@@ -1,0 +1,223 @@
+"""RWKV6 "Finch" — attention-free RNN with data-dependent decay (rwkv6-7b).
+
+Faithful structure: token-shift lerps, r/k/v/g projections, per-channel
+data-dependent decay w_t = exp(−exp(w_base + LoRA(x))) and the bonus-u WKV
+recurrence  S_t = diag(w_t)·S_{t−1} + k_tᵀ v_t,  o_t = r_t·(S_{t−1} + u∘k_tᵀ v_t),
+plus the squared-ReLU channel-mix. The recurrence is a ``lax.scan`` over
+time (one HLO while-loop — the production TPU form would be the chunked
+parallel scan; see EXPERIMENTS §Perf for the chunked variant).
+
+Decode state is O(1) in sequence length — this is why rwkv6 runs the
+``long_500k`` cell that dense-attention archs skip.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .config import LMConfig
+
+LORA_R = 32
+
+
+def _init_linear(key, d_in, d_out, dtype):
+    return jax.random.normal(key, (d_in, d_out), dtype=dtype) * float(1.0 / np.sqrt(d_in))
+
+
+class RWKV6:
+    def __init__(self, cfg: LMConfig, shard: L.Shard = L.no_shard):
+        self.cfg = cfg
+        self.shard = shard
+        self.hd = cfg.ssm_head_dim
+        self.n_heads_tm = cfg.d_model // self.hd
+
+    # -- init -----------------------------------------------------------------
+    def init_layer(self, key) -> dict:
+        cfg = self.cfg
+        d, f = cfg.d_model, cfg.d_ff
+        dtype = jnp.dtype(cfg.dtype)
+        ks = jax.random.split(key, 10)
+        h, hd = self.n_heads_tm, self.hd
+        return {
+            "ln1": jnp.ones((d,), dtype=dtype),
+            "ln2": jnp.ones((d,), dtype=dtype),
+            "mu": 0.5 * jnp.ones((5, d), dtype=dtype),      # r,k,v,g,w shifts
+            "wr": _init_linear(ks[0], d, d, dtype),
+            "wk": _init_linear(ks[1], d, d, dtype),
+            "wv": _init_linear(ks[2], d, d, dtype),
+            "wg": _init_linear(ks[3], d, d, dtype),
+            "wo": _init_linear(ks[4], d, d, dtype),
+            "w_base": jnp.full((d,), -2.0, dtype=dtype),
+            "w_lora_a": _init_linear(ks[5], d, LORA_R, dtype),
+            "w_lora_b": jnp.zeros((LORA_R, d), dtype=dtype),
+            "u": jnp.zeros((h, hd), dtype=dtype),
+            "ln_x": jnp.ones((d,), dtype=dtype),             # post-wkv norm
+            "mu_c": 0.5 * jnp.ones((2, d), dtype=dtype),     # channel-mix k,r
+            "wck": _init_linear(ks[6], d, f, dtype),
+            "wcv": _init_linear(ks[7], f, d, dtype),
+            "wcr": _init_linear(ks[8], d, d, dtype),
+        }
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        keys = jax.random.split(key, cfg.n_layers + 2)
+        return {
+            "embed": jax.random.normal(
+                keys[0], (cfg.vocab, cfg.d_model), dtype=dtype) * 0.02,
+            "layers": L.stack_layer_params(
+                [self.init_layer(keys[1 + i]) for i in range(cfg.n_layers)]),
+            "final_norm": jnp.ones((cfg.d_model,), dtype=dtype),
+            "lm_head": jax.random.normal(
+                keys[-1], (cfg.d_model, cfg.vocab), dtype=dtype) * 0.02,
+        }
+
+    # -- pieces ---------------------------------------------------------------
+    def _decay(self, layer, xw):
+        """Data-dependent per-channel decay in (0, 1)."""
+        lo = jnp.tanh(xw @ layer["w_lora_a"]) @ layer["w_lora_b"]
+        return jnp.exp(-jnp.exp(
+            (layer["w_base"] + lo).astype(jnp.float32)))
+
+    def _wkv_scan(self, r, k, v, w, u, state):
+        """Recurrence over time.
+
+        r/k/v/w: (b, s, h, hd); u: (h, hd); state: (b, h, hd, hd).
+        Returns (out (b, s, h, hd), final state).
+        """
+        def step(S, inp):
+            r_t, k_t, v_t, w_t = inp                    # (b, h, hd) each
+            kv = k_t[..., :, None] * v_t[..., None, :]  # (b, h, hd, hd)
+            o = jnp.einsum("bhi,bhij->bhj", r_t,
+                           S + u[None, :, :, None] * kv)
+            S = w_t[..., :, None] * S + kv
+            return S, o
+
+        xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+        state, out = jax.lax.scan(step, state, xs)
+        return jnp.moveaxis(out, 0, 1), state
+
+    def _time_mix(self, layer, x, x_prev, state):
+        """x (b, s, d); x_prev (b, d) last token of the previous segment."""
+        b, s, d = x.shape
+        h, hd = self.n_heads_tm, self.hd
+        xs = jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+        mu = layer["mu"]
+        mix = lambda i: x + mu[i] * (xs - x)
+        xr, xk, xv, xg, xw = (mix(i) for i in range(5))
+        r = (xr @ layer["wr"]).reshape(b, s, h, hd)
+        k = (xk @ layer["wk"]).reshape(b, s, h, hd)
+        v = (xv @ layer["wv"]).reshape(b, s, h, hd)
+        g = xg @ layer["wg"]
+        w = self._decay(layer, xw).reshape(b, s, h, hd).astype(x.dtype)
+        out, state = self._wkv_scan(r, k, v, w, layer["u"], state)
+        out = out.reshape(b, s, d).astype(x.dtype)   # state math stays f32
+        out = L.rms_norm(out, layer["ln_x"])
+        out = (out * jax.nn.silu(g)) @ layer["wo"]
+        return self.shard(out, ("batch", "seq", "embed")), x[:, -1, :], state
+
+    def _channel_mix(self, layer, x, x_prev):
+        xs = jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+        mu = layer["mu_c"]
+        xk = x + mu[0] * (xs - x)
+        xr = x + mu[1] * (xs - x)
+        kk = jnp.square(jax.nn.relu(xk @ layer["wck"]))
+        kk = self.shard(kk, ("batch", "seq", "mlp"))
+        out = jax.nn.sigmoid(xr @ layer["wcr"]) * (kk @ layer["wcv"])
+        return self.shard(out, ("batch", "seq", "embed")), x[:, -1, :]
+
+    def _block(self, layer, x, st):
+        h1, tm_prev, tm_state = self._time_mix(
+            layer, L.rms_norm(x, layer["ln1"]), st["tm_prev"], st["tm_state"])
+        x = x + h1
+        h2, cm_prev = self._channel_mix(
+            layer, L.rms_norm(x, layer["ln2"]), st["cm_prev"])
+        x = x + h2
+        return x, {"tm_prev": tm_prev, "tm_state": tm_state,
+                   "cm_prev": cm_prev}
+
+    def _zero_state(self, b):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        h, hd = self.n_heads_tm, self.hd
+        return {
+            "tm_prev": jnp.zeros((b, cfg.d_model), dtype=dtype),
+            "tm_state": jnp.zeros((b, h, hd, hd), dtype=jnp.float32),
+            "cm_prev": jnp.zeros((b, cfg.d_model), dtype=dtype),
+        }
+
+    # -- public ---------------------------------------------------------------
+    def forward(self, params, tokens, state=None, return_state=False):
+        cfg = self.cfg
+        b, s = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x = self.shard(x, ("batch", "seq", "embed"))
+
+        def layer_step(carry, xs):
+            layer, st = xs
+            out, st = self._block(layer, carry, st)
+            return out, st
+
+        if cfg.remat:
+            layer_step = jax.checkpoint(layer_step)
+        if state is None:
+            states = jax.tree.map(
+                lambda z: jnp.broadcast_to(z, (cfg.n_layers,) + z.shape),
+                self._zero_state(b))
+        else:
+            states = state
+        x, states = jax.lax.scan(layer_step, x, (params["layers"], states))
+        x = L.rms_norm(x, params["final_norm"])
+        logits = x @ params["lm_head"]
+        logits = self.shard(logits, ("batch", "seq", "vocab"))
+        if return_state:
+            return logits, states
+        return logits
+
+    def hidden(self, params, tokens, state=None):
+        """Final hidden states (pre-norm, pre-head)."""
+        cfg = self.cfg
+        b, s = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x = self.shard(x, ("batch", "seq", "embed"))
+
+        def layer_step(carry, xs):
+            layer, st = xs
+            out, st = self._block(layer, carry, st)
+            return out, st
+
+        if cfg.remat:
+            layer_step = jax.checkpoint(layer_step)
+        if state is None:
+            state = jax.tree.map(
+                lambda z: jnp.broadcast_to(z, (cfg.n_layers,) + z.shape),
+                self._zero_state(b))
+        x, states = jax.lax.scan(layer_step, x, (params["layers"], state))
+        return x, states
+
+    def loss(self, params, batch):
+        x, _ = self.hidden(params, batch["tokens"])
+        return L.chunked_ce_loss(x, params["final_norm"],
+                                 params["lm_head"], batch["tokens"],
+                                 shard=self.shard)
+
+    # -- serving ----------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int) -> dict:
+        del max_len  # O(1) state!
+        return jax.tree.map(
+            lambda z: jnp.broadcast_to(z, (self.cfg.n_layers,) + z.shape)
+                      .copy(),
+            self._zero_state(batch))
+
+    def prefill(self, params, tokens, cache):
+        logits, state = self.forward(params, tokens, state=cache,
+                                     return_state=True)
+        return logits[:, -1], state
+
+    def decode_step(self, params, tokens, cache):
+        logits, state = self.forward(params, tokens, state=cache,
+                                     return_state=True)
+        return logits[:, 0], state

@@ -1,0 +1,197 @@
+"""Dense GQA decoder-only transformer (granite / smollm / llama3 / qwen3 and
+the pixtral text backbone).
+
+Layers are stacked (leading L dim) and run under ``lax.scan`` with optional
+remat — HLO stays O(1) in depth. All activation placements go through the
+injected ``shard`` callable (identity on CPU tests, sharding constraints
+under the production mesh).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .config import LMConfig
+
+
+class DenseTransformer:
+    def __init__(self, cfg: LMConfig, shard: L.Shard = L.no_shard):
+        self.cfg = cfg
+        self.shard = shard
+        # set to a DecodeShardCtx to enable distributed flash-decode
+        # (sequence-parallel KV; see layers.flash_decode_sharded)
+        self.decode_ctx: L.DecodeShardCtx | None = None
+        self.dims = L.AttnDims(
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+            d_model=cfg.d_model, qk_norm=cfg.qk_norm,
+            rope_theta=cfg.rope_theta)
+
+    # -- init -----------------------------------------------------------------
+    def init_layer(self, key) -> dict:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln1": jnp.ones((cfg.d_model,), dtype=dtype),
+            "ln2": jnp.ones((cfg.d_model,), dtype=dtype),
+            "attn": L.init_attn(k1, self.dims, dtype),
+            "mlp": L.init_swiglu(k2, cfg.d_model, cfg.d_ff, dtype),
+        }
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        keys = jax.random.split(key, cfg.n_layers + 2)
+        params = {
+            "embed": jax.random.normal(
+                keys[0], (cfg.vocab, cfg.d_model), dtype=dtype) * 0.02,
+            "layers": L.stack_layer_params(
+                [self.init_layer(keys[1 + i]) for i in range(cfg.n_layers)]),
+            "final_norm": jnp.ones((cfg.d_model,), dtype=dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = jax.random.normal(
+                keys[-1], (cfg.d_model, cfg.vocab), dtype=dtype) * 0.02
+        return params
+
+    # -- blocks ---------------------------------------------------------------
+    def _block(self, x, layer, positions):
+        shard = self.shard
+        h = L.rms_norm(x, layer["ln1"])
+        h = L.attention(layer["attn"], self.dims, h, shard=shard,
+                        causal=True, positions=positions)
+        x = x + h
+        h = L.rms_norm(x, layer["ln2"])
+        x = x + self._mlp(layer, h)
+        return x
+
+    def _mlp(self, layer, h):
+        return L.swiglu(layer["mlp"], h, self.shard)
+
+    def _run_layers(self, params, x, positions):
+        cfg = self.cfg
+
+        def step(carry, layer):
+            return self._block(carry, layer, positions), None
+
+        if cfg.remat:
+            step = jax.checkpoint(step)
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(step, x, params["layers"])
+        else:
+            for i in range(cfg.n_layers):
+                layer = jax.tree.map(lambda p: p[i], params["layers"])
+                x, _ = step(x, layer)
+        return x
+
+    def _head(self, params, x):
+        x = L.rms_norm(x, params["final_norm"])
+        w = (params["embed"].T if self.cfg.tie_embeddings
+             else params["lm_head"])
+        logits = x @ w
+        return self.shard(logits, ("batch", "seq", "vocab"))
+
+    # -- public ---------------------------------------------------------------
+    def embed_tokens(self, params, tokens):
+        x = jnp.take(params["embed"], tokens, axis=0)
+        return self.shard(x, ("batch", "seq", "embed"))
+
+    def forward(self, params, tokens, positions=None):
+        """tokens (b, s) -> logits (b, s, v)."""
+        return self.forward_from_x(params, self.embed_tokens(params, tokens),
+                                   positions)
+
+    def forward_from_x(self, params, x, positions=None):
+        """Pre-embedded entry (VLM/audio frontends inject here)."""
+        b, s, _ = x.shape
+        if positions is None:
+            positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+        x = self._run_layers(params, x, positions)
+        return self._head(params, x)
+
+    def head_weight(self, params):
+        return (params["embed"].T if self.cfg.tie_embeddings
+                else params["lm_head"])
+
+    def loss(self, params, batch):
+        """Sequence-chunked CE — full (b, s, v) logits never materialize."""
+        tokens = batch["tokens"]
+        x = self.embed_tokens(params, tokens)
+        positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)[None, :]
+        x = self._run_layers(params, x, positions)
+        return L.chunked_ce_loss(x, params["final_norm"],
+                                 self.head_weight(params), tokens,
+                                 shard=self.shard)
+
+    # -- serving ----------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int) -> dict:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd)
+        return {
+            "k": jnp.zeros(shape, dtype=dtype),
+            "v": jnp.zeros(shape, dtype=dtype),
+            "index": jnp.zeros((), dtype=jnp.int32),
+        }
+
+    def prefill(self, params, tokens, cache):
+        """Full-sequence forward that also fills positions [0, s) of the
+        cache. Returns (last-position logits (b, v), cache)."""
+        return self.prefill_from_x(params,
+                                   self.embed_tokens(params, tokens), cache)
+
+    def prefill_from_x(self, params, x, cache):
+        cfg = self.cfg
+        b, s, _ = x.shape
+        positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+
+        def step(carry, layer):
+            h = L.rms_norm(carry, layer["ln1"])
+            q, k, v = L._qkv(layer["attn"], self.dims, h, positions,
+                             self.shard)
+            attn = L._attend(q, k, v, causal=True)
+            attn = attn.reshape(b, s, cfg.n_heads * cfg.hd) @ layer["attn"]["wo"]
+            carry = carry + self.shard(attn, ("batch", "seq", "embed"))
+            h = L.rms_norm(carry, layer["ln2"])
+            carry = carry + self._mlp(layer, h)
+            return carry, (k, v)
+
+        if cfg.remat:
+            step = jax.checkpoint(step)
+        x, (ks, vs) = jax.lax.scan(step, x, params["layers"])
+        logits = self._head(params, x[:, -1:, :])[:, 0]
+        s_max = cache["k"].shape[2]
+        pad = [(0, 0), (0, 0), (0, s_max - s), (0, 0), (0, 0)]
+        cache = {
+            "k": jnp.pad(ks, pad).astype(cache["k"].dtype),
+            "v": jnp.pad(vs, pad).astype(cache["v"].dtype),
+            "index": jnp.asarray(s, dtype=jnp.int32),
+        }
+        return logits, cache
+
+    def decode_step(self, params, tokens, cache):
+        """tokens (b, 1) + cache -> (logits (b, v), updated cache)."""
+        cfg = self.cfg
+        b = tokens.shape[0]
+        idx = cache["index"]
+        x = self.embed_tokens(params, tokens)
+
+        def step(carry, xs):
+            layer, kc, vc = xs
+            h = L.rms_norm(carry, layer["ln1"])
+            out, kc, vc = L.attention_decode(
+                layer["attn"], self.dims, h, kc, vc, idx, shard=self.shard,
+                decode_ctx=self.decode_ctx)
+            carry = carry + out
+            h = L.rms_norm(carry, layer["ln2"])
+            carry = carry + self._mlp(layer, h)
+            return carry, (kc, vc)
+
+        x, (ks, vs) = jax.lax.scan(step, x,
+                                   (params["layers"], cache["k"], cache["v"]))
+        logits = self._head(params, x)[:, 0]
+        return logits, {"k": ks, "v": vs, "index": idx + 1}

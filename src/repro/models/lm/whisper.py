@@ -1,0 +1,248 @@
+"""Whisper-small backbone — encoder-decoder transformer.
+
+The audio frontend (log-mel + conv downsampling) is a STUB per the
+assignment: ``input_specs()`` supplies precomputed frame embeddings
+(b, s_enc, d). Encoder: bidirectional MHA + GELU MLP with sinusoidal
+positions. Decoder: causal self-attention + cross-attention over the encoded
+memory + GELU MLP, learned positions. No RoPE (Whisper uses absolute
+positions).
+
+Decode shapes lower the *decoder* step: self-attention KV cache plus
+precomputed cross-attention K/V (computed once at prefill from the memory).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .config import LMConfig
+
+
+def sinusoid_positions(s: int, d: int) -> np.ndarray:
+    pos = np.arange(s)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10_000.0, 2 * i / d)
+    return np.concatenate([np.sin(ang), np.cos(ang)], axis=-1).astype(np.float32)
+
+
+class Whisper:
+    def __init__(self, cfg: LMConfig, shard: L.Shard = L.no_shard):
+        self.cfg = cfg
+        self.shard = shard
+        self.decode_ctx: L.DecodeShardCtx | None = None
+        self.dims = L.AttnDims(
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+            d_model=cfg.d_model)
+
+    # -- init -----------------------------------------------------------------
+    def _init_block(self, key, cross: bool) -> dict:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        ks = jax.random.split(key, 3)
+        p = {
+            "ln1": jnp.ones((cfg.d_model,), dtype=dtype),
+            "ln2": jnp.ones((cfg.d_model,), dtype=dtype),
+            "attn": L.init_attn(ks[0], self.dims, dtype),
+            "mlp": L.init_gelu_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype),
+        }
+        if cross:
+            p["ln_x"] = jnp.ones((cfg.d_model,), dtype=dtype)
+            p["xattn"] = L.init_attn(ks[2], self.dims, dtype)
+        return p
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        n_enc = cfg.encoder_layers
+        keys = jax.random.split(key, n_enc + cfg.n_layers + 3)
+        return {
+            "embed": jax.random.normal(
+                keys[0], (cfg.vocab, cfg.d_model), dtype=dtype) * 0.02,
+            # sized for the longest assigned decode cell (decode_32k)
+            "pos_dec": jax.random.normal(
+                keys[1], (65536, cfg.d_model), dtype=dtype) * 0.01,
+            "encoder": L.stack_layer_params(
+                [self._init_block(keys[2 + i], cross=False)
+                 for i in range(n_enc)]),
+            "decoder": L.stack_layer_params(
+                [self._init_block(keys[2 + n_enc + i], cross=True)
+                 for i in range(cfg.n_layers)]),
+            "enc_norm": jnp.ones((cfg.d_model,), dtype=dtype),
+            "dec_norm": jnp.ones((cfg.d_model,), dtype=dtype),
+            "lm_head": jax.random.normal(
+                keys[-1], (cfg.d_model, cfg.vocab), dtype=dtype) * 0.02,
+        }
+
+    # -- encoder ----------------------------------------------------------------
+    def encode(self, params, frames):
+        """frames (b, s_enc, d) — stub-frontend output — -> memory."""
+        cfg = self.cfg
+        b, s, d = frames.shape
+        x = frames + jnp.asarray(sinusoid_positions(s, d),
+                                 dtype=frames.dtype)[None]
+        x = self.shard(x, ("batch", "seq", "embed"))
+
+        def step(carry, layer):
+            h = L.rms_norm(carry, layer["ln1"])
+            h = L.attention(layer["attn"], self.dims, h, shard=self.shard,
+                            causal=False, rope=False)
+            carry = carry + h
+            h = L.rms_norm(carry, layer["ln2"])
+            return carry + L.gelu_mlp(layer["mlp"], h, self.shard), None
+
+        if cfg.remat:
+            step = jax.checkpoint(step)
+        x, _ = jax.lax.scan(step, x, params["encoder"])
+        return L.rms_norm(x, params["enc_norm"])
+
+    # -- decoder ----------------------------------------------------------------
+    def _embed_dec(self, params, tokens, pos0=0):
+        b, s = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0)
+        pos = jax.lax.dynamic_slice_in_dim(params["pos_dec"], pos0, s, axis=0)
+        return self.shard(x + pos[None], ("batch", "seq", "embed"))
+
+    def decode_full(self, params, tokens, memory):
+        """Teacher-forced decoder (training/prefill math)."""
+        cfg = self.cfg
+        x = self._embed_dec(params, tokens)
+
+        def step(carry, layer):
+            h = L.rms_norm(carry, layer["ln1"])
+            h = L.attention(layer["attn"], self.dims, h, shard=self.shard,
+                            causal=True, rope=False)
+            carry = carry + h
+            h = L.rms_norm(carry, layer["ln_x"])
+            h = L.attention(layer["xattn"], self.dims, h, shard=self.shard,
+                            memory=memory, rope=False)
+            carry = carry + h
+            h = L.rms_norm(carry, layer["ln2"])
+            return carry + L.gelu_mlp(layer["mlp"], h, self.shard), None
+
+        if cfg.remat:
+            step = jax.checkpoint(step)
+        x, _ = jax.lax.scan(step, x, params["decoder"])
+        x = L.rms_norm(x, params["dec_norm"])
+        logits = x @ params["lm_head"]
+        return self.shard(logits, ("batch", "seq", "vocab"))
+
+    def forward(self, params, tokens, frames):
+        return self.decode_full(params, tokens, self.encode(params, frames))
+
+    def loss(self, params, batch):
+        memory = self.encode(params, batch["frames"])
+        x = self._decoder_hidden(params, batch["tokens"], memory)
+        return L.chunked_ce_loss(x, params["dec_norm"], params["lm_head"],
+                                 batch["tokens"], shard=self.shard)
+
+    def _decoder_hidden(self, params, tokens, memory):
+        cfg = self.cfg
+        x = self._embed_dec(params, tokens)
+
+        def step(carry, layer):
+            h = L.rms_norm(carry, layer["ln1"])
+            h = L.attention(layer["attn"], self.dims, h, shard=self.shard,
+                            causal=True, rope=False)
+            carry = carry + h
+            h = L.rms_norm(carry, layer["ln_x"])
+            h = L.attention(layer["xattn"], self.dims, h, shard=self.shard,
+                            memory=memory, rope=False)
+            carry = carry + h
+            h = L.rms_norm(carry, layer["ln2"])
+            return carry + L.gelu_mlp(layer["mlp"], h, self.shard), None
+
+        if cfg.remat:
+            step = jax.checkpoint(step)
+        x, _ = jax.lax.scan(step, x, params["decoder"])
+        return x
+
+    # -- serving ----------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int, mem_len: int) -> dict:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        kv = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd)
+        xkv = (cfg.n_layers, batch, mem_len, cfg.n_kv_heads, cfg.hd)
+        return {
+            "k": jnp.zeros(kv, dtype=dtype),
+            "v": jnp.zeros(kv, dtype=dtype),
+            "xk": jnp.zeros(xkv, dtype=dtype),
+            "xv": jnp.zeros(xkv, dtype=dtype),
+            "index": jnp.zeros((), dtype=jnp.int32),
+        }
+
+    def prefill(self, params, tokens, frames, cache):
+        """Encode + teacher-forced prefix + cache self/cross K/V."""
+        cfg = self.cfg
+        b, s = tokens.shape
+        memory = self.encode(params, frames)
+        x = self._embed_dec(params, tokens)
+        positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+        sm = memory.shape[1]
+        h_, kv_, hd = cfg.n_heads, cfg.n_kv_heads, self.dims.head_dim
+
+        def step(carry, layer):
+            h = L.rms_norm(carry, layer["ln1"])
+            q, k, v = L._qkv(layer["attn"], self.dims, h, positions,
+                             self.shard, rope=False)
+            attn = L._attend(q, k, v, causal=True)
+            carry = carry + attn.reshape(b, s, -1) @ layer["attn"]["wo"]
+            h = L.rms_norm(carry, layer["ln_x"])
+            qx = (h @ layer["xattn"]["wq"]).reshape(b, s, h_, hd)
+            xk = (memory @ layer["xattn"]["wk"]).reshape(b, sm, kv_, hd)
+            xv = (memory @ layer["xattn"]["wv"]).reshape(b, sm, kv_, hd)
+            attn = L._attend(qx, xk, xv, causal=False)
+            carry = carry + attn.reshape(b, s, -1) @ layer["xattn"]["wo"]
+            h = L.rms_norm(carry, layer["ln2"])
+            return carry + L.gelu_mlp(layer["mlp"], h, self.shard), (k, v, xk, xv)
+
+        x, (ks, vs, xks, xvs) = jax.lax.scan(step, x, params["decoder"])
+        x = L.rms_norm(x, params["dec_norm"])
+        logits = (x[:, -1:, :] @ params["lm_head"])[:, 0]
+        s_max = cache["k"].shape[2]
+        pad = [(0, 0), (0, 0), (0, s_max - s), (0, 0), (0, 0)]
+        return logits, {
+            "k": jnp.pad(ks, pad).astype(cache["k"].dtype),
+            "v": jnp.pad(vs, pad).astype(cache["v"].dtype),
+            "xk": xks.astype(cache["xk"].dtype),
+            "xv": xvs.astype(cache["xv"].dtype),
+            "index": jnp.asarray(s, jnp.int32),
+        }
+
+    def decode_step(self, params, tokens, cache):
+        cfg = self.cfg
+        b = tokens.shape[0]
+        idx = cache["index"]
+        x = jnp.take(params["embed"], tokens, axis=0)
+        pos = jax.lax.dynamic_slice_in_dim(params["pos_dec"], idx, 1, axis=0)
+        x = x + pos[None]
+        h_, hd = cfg.n_heads, self.dims.head_dim
+
+        def step(carry, xs):
+            layer, kc, vc, xk, xv = xs
+            h = L.rms_norm(carry, layer["ln1"])
+            out, kc, vc = L.attention_decode(
+                layer["attn"], self.dims, h, kc, vc, idx, shard=self.shard,
+                rope=False, decode_ctx=self.decode_ctx)
+            carry = carry + out
+            h = L.rms_norm(carry, layer["ln_x"])
+            qx = (h @ layer["xattn"]["wq"]).reshape(b, 1, h_, hd)
+            if self.decode_ctx is not None:
+                # cross-attention over the seq-sharded encoded memory
+                limit = jnp.asarray(xk.shape[1] + 1, jnp.int32)
+                attn, _, _ = L.flash_decode_sharded(
+                    qx, xk, xv, None, None, limit, self.decode_ctx)
+            else:
+                attn = L._attend(qx, xk, xv, causal=False)
+            carry = carry + attn.reshape(b, 1, -1) @ layer["xattn"]["wo"]
+            h = L.rms_norm(carry, layer["ln2"])
+            return carry + L.gelu_mlp(layer["mlp"], h, self.shard), (kc, vc)
+
+        x, (ks, vs) = jax.lax.scan(
+            step, x, (params["decoder"], cache["k"], cache["v"],
+                      cache["xk"], cache["xv"]))
+        x = L.rms_norm(x, params["dec_norm"])
+        logits = (x @ params["lm_head"])[:, 0]
+        return logits, {**cache, "k": ks, "v": vs, "index": idx + 1}

@@ -1,0 +1,345 @@
+"""Zamba2 hybrid — Mamba2 backbone with a *shared* attention block applied
+every N layers (zamba2-1.2b: 38 mamba layers, shared block every 6).
+
+Mamba2 block (SSD form, single B/C group): in-proj → short causal depthwise
+conv → selective state-space recurrence with per-head scalar decay
+``exp(dt·A)`` over state (head_dim × ssm_state) → gated RMS-norm → out-proj.
+The recurrence is a ``lax.scan`` over time (O(1) decode state — long_500k
+eligible). The shared attention block takes ``concat(h, x_embed)`` projected
+back to d_model (the Zamba trick), has ONE set of weights reused at every
+application point, but its own KV cache per application.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .config import LMConfig
+
+
+class Zamba2:
+    def __init__(self, cfg: LMConfig, shard: L.Shard = L.no_shard):
+        self.cfg = cfg
+        self.shard = shard
+        self.decode_ctx: L.DecodeShardCtx | None = None
+        self.d_in = cfg.ssm_expand * cfg.d_model
+        self.hd = cfg.ssm_head_dim
+        self.n_heads_m = self.d_in // self.hd
+        self.conv_dim = self.d_in + 2 * cfg.ssm_state
+        self.attn_dims = L.AttnDims(
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.d_model // cfg.n_heads, d_model=cfg.d_model,
+            rope_theta=cfg.rope_theta)
+
+    # chunk boundaries between shared-attention applications
+    def chunks(self) -> list[tuple[int, int]]:
+        cfg = self.cfg
+        if not cfg.shared_attn_every:
+            return [(0, cfg.n_layers)]
+        out, a = [], 0
+        while a < cfg.n_layers:
+            b = min(a + cfg.shared_attn_every, cfg.n_layers)
+            out.append((a, b))
+            a = b
+        return out
+
+    def n_shared(self) -> int:
+        cfg = self.cfg
+        if not cfg.shared_attn_every:
+            return 0
+        return sum(1 for (a, b) in self.chunks()
+                   if b - a == cfg.shared_attn_every)
+
+    # -- init -----------------------------------------------------------------
+    def init_mamba_layer(self, key) -> dict:
+        cfg = self.cfg
+        d, din, n, h = cfg.d_model, self.d_in, cfg.ssm_state, self.n_heads_m
+        dtype = jnp.dtype(cfg.dtype)
+        ks = jax.random.split(key, 3)
+        proj_out = 2 * din + 2 * n + h          # z, x, B, C, dt
+        return {
+            "ln": jnp.ones((d,), dtype=dtype),
+            "w_in": jax.random.normal(ks[0], (d, proj_out), dtype=dtype)
+                    * float(1.0 / np.sqrt(d)),
+            "conv_w": jax.random.normal(ks[1], (cfg.conv_kernel,
+                                                self.conv_dim), dtype=dtype)
+                      * float(1.0 / np.sqrt(cfg.conv_kernel)),
+            "a_log": jnp.zeros((h,), dtype=jnp.float32),
+            "dt_bias": jnp.zeros((h,), dtype=jnp.float32),
+            "d_skip": jnp.ones((h,), dtype=dtype),
+            "ln_y": jnp.ones((din,), dtype=dtype),
+            "w_out": jax.random.normal(ks[2], (din, d), dtype=dtype)
+                     * float(1.0 / np.sqrt(din)),
+        }
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        keys = jax.random.split(key, cfg.n_layers + 4)
+        params = {
+            "embed": jax.random.normal(
+                keys[0], (cfg.vocab, cfg.d_model), dtype=dtype) * 0.02,
+            "mamba": L.stack_layer_params(
+                [self.init_mamba_layer(keys[1 + i])
+                 for i in range(cfg.n_layers)]),
+            "final_norm": jnp.ones((cfg.d_model,), dtype=dtype),
+            "lm_head": jax.random.normal(
+                keys[-1], (cfg.d_model, cfg.vocab), dtype=dtype) * 0.02,
+        }
+        if self.n_shared():
+            k1, k2, k3 = jax.random.split(keys[-2], 3)
+            params["shared"] = {
+                "ln_in": jnp.ones((2 * cfg.d_model,), dtype=dtype),
+                "w_in": jax.random.normal(
+                    k1, (2 * cfg.d_model, cfg.d_model), dtype=dtype)
+                    * float(1.0 / np.sqrt(2 * cfg.d_model)),
+                "ln1": jnp.ones((cfg.d_model,), dtype=dtype),
+                "ln2": jnp.ones((cfg.d_model,), dtype=dtype),
+                "attn": L.init_attn(k2, self.attn_dims, dtype),
+                "mlp": L.init_swiglu(k3, cfg.d_model, cfg.d_ff, dtype),
+            }
+        return params
+
+    # -- mamba core -----------------------------------------------------------
+    def _split_proj(self, z):
+        din, n, h = self.d_in, self.cfg.ssm_state, self.n_heads_m
+        zg = z[..., :din]
+        xs = z[..., din:2 * din]
+        bb = z[..., 2 * din:2 * din + n]
+        cc = z[..., 2 * din + n:2 * din + 2 * n]
+        dt = z[..., 2 * din + 2 * n:]
+        return zg, xs, bb, cc, dt
+
+    def _conv(self, conv_in, conv_w, conv_state):
+        """Causal depthwise conv; returns (out, new_state (b, k-1, C))."""
+        k = conv_w.shape[0]
+        full = jnp.concatenate([conv_state, conv_in], axis=1)
+        s = conv_in.shape[1]
+        out = sum(full[:, j:j + s, :] * conv_w[j][None, None, :]
+                  for j in range(k))
+        return out, full[:, -(k - 1):, :]
+
+    def _ssm_scan(self, xh, bb, cc, dt, a_log, d_skip, state):
+        """xh (b,s,h,hd); bb/cc (b,s,n); dt (b,s,h); state (b,h,hd,n)."""
+        a = -jnp.exp(a_log)                                  # (h,)
+
+        def step(S, inp):
+            x_t, b_t, c_t, dt_t = inp                        # (b,h,hd),(b,n),(b,n),(b,h)
+            decay = jnp.exp(dt_t * a[None, :])               # (b,h)
+            contrib = (dt_t[..., None, None]
+                       * x_t[..., :, None] * b_t[:, None, None, :])
+            S = decay[..., None, None] * S + contrib
+            y = jnp.einsum("bhpn,bn->bhp", S, c_t)
+            return S, y
+
+        xs = (jnp.moveaxis(xh, 1, 0), jnp.moveaxis(bb, 1, 0),
+              jnp.moveaxis(cc, 1, 0), jnp.moveaxis(dt, 1, 0))
+        state, ys = jax.lax.scan(step, state, xs)
+        y = jnp.moveaxis(ys, 0, 1)                           # (b,s,h,hd)
+        return y + d_skip[None, None, :, None] * xh, state
+
+    def _mamba_block(self, layer, x, st):
+        cfg = self.cfg
+        b, s, d = x.shape
+        h, hd = self.n_heads_m, self.hd
+        xin = L.rms_norm(x, layer["ln"])
+        z = xin @ layer["w_in"]
+        zg, xs_, bb, cc, dt = self._split_proj(z)
+        conv_in = jnp.concatenate([xs_, bb, cc], axis=-1)
+        conv_out, conv_state = self._conv(conv_in, layer["conv_w"],
+                                          st["conv"])
+        conv_out = jax.nn.silu(conv_out)
+        xs_, bb, cc = (conv_out[..., :self.d_in],
+                       conv_out[..., self.d_in:self.d_in + cfg.ssm_state],
+                       conv_out[..., self.d_in + cfg.ssm_state:])
+        dt = jax.nn.softplus(dt.astype(jnp.float32)
+                             + layer["dt_bias"][None, None, :])
+        xh = xs_.reshape(b, s, h, hd)
+        y, ssm_state = self._ssm_scan(xh, bb.astype(jnp.float32),
+                                      cc.astype(jnp.float32), dt,
+                                      layer["a_log"], layer["d_skip"],
+                                      st["ssm"])
+        y = y.reshape(b, s, self.d_in).astype(x.dtype)
+        y = L.rms_norm(y, layer["ln_y"]) * jax.nn.silu(zg)
+        out = y @ layer["w_out"]
+        out = self.shard(out, ("batch", "seq", "embed"))
+        return x + out, {"conv": conv_state, "ssm": ssm_state}
+
+    def _zero_mamba_state(self, b):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        return {
+            "conv": jnp.zeros((b, cfg.conv_kernel - 1, self.conv_dim),
+                              dtype=dtype),
+            "ssm": jnp.zeros((b, self.n_heads_m, self.hd, cfg.ssm_state),
+                             dtype=jnp.float32),
+        }
+
+    # -- shared attention block -------------------------------------------------
+    def _shared_block(self, p, x, x0, kv=None, idx=None):
+        """Full-seq when kv is None; cached decode otherwise."""
+        h = jnp.concatenate([x, x0], axis=-1)
+        h = L.rms_norm(h, p["ln_in"]) @ p["w_in"]
+        a_in = L.rms_norm(h, p["ln1"])
+        if kv is None:
+            attn = L.attention(p["attn"], self.attn_dims, a_in,
+                               shard=self.shard, causal=True)
+            new_kv = None
+        else:
+            k_cache, v_cache = kv
+            attn, k_cache, v_cache = L.attention_decode(
+                p["attn"], self.attn_dims, a_in, k_cache, v_cache, idx,
+                shard=self.shard, decode_ctx=self.decode_ctx)
+            new_kv = (k_cache, v_cache)
+        h = h + attn
+        h = h + L.swiglu(p["mlp"], L.rms_norm(h, p["ln2"]), self.shard)
+        return x + h, new_kv
+
+    # -- forward ----------------------------------------------------------------
+    def _run(self, params, x, states, shared_kv=None, idx=None):
+        """states: stacked (L, ...) mamba states; shared_kv: (n_shared k/v
+        caches) or None for full-seq attention."""
+        cfg = self.cfg
+        x0 = x
+        si = 0
+        new_states = []
+        new_kv = []
+        for (a, b) in self.chunks():
+            sub = jax.tree.map(lambda p: p[a:b], params["mamba"])
+            st = jax.tree.map(lambda p: p[a:b], states)
+
+            def step(carry, xs):
+                layer, s_l = xs
+                out, s_l = self._mamba_block(layer, carry, s_l)
+                return out, s_l
+
+            step_fn = jax.checkpoint(step) if cfg.remat else step
+            x, st = jax.lax.scan(step_fn, x, (sub, st))
+            new_states.append(st)
+            if (b - a) == cfg.shared_attn_every and self.n_shared():
+                if shared_kv is None:
+                    x, _ = self._shared_block(params["shared"], x, x0)
+                else:
+                    kv = (shared_kv["k"][si], shared_kv["v"][si])
+                    x, kv = self._shared_block(params["shared"], x, x0,
+                                               kv=kv, idx=idx)
+                    new_kv.append(kv)
+                si += 1
+        states = jax.tree.map(lambda *xs: jnp.concatenate(xs), *new_states)
+        if new_kv:
+            shared_kv = {
+                "k": jnp.stack([kv[0] for kv in new_kv]),
+                "v": jnp.stack([kv[1] for kv in new_kv]),
+            }
+        return x, states, shared_kv
+
+    def forward(self, params, tokens, positions=None):
+        b, s = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x = self.shard(x, ("batch", "seq", "embed"))
+        states = jax.tree.map(
+            lambda z: jnp.broadcast_to(z, (self.cfg.n_layers,) + z.shape),
+            self._zero_mamba_state(b))
+        x, _, _ = self._run(params, x, states)
+        x = L.rms_norm(x, params["final_norm"])
+        logits = x @ params["lm_head"]
+        return self.shard(logits, ("batch", "seq", "vocab"))
+
+    def loss(self, params, batch):
+        tokens = batch["tokens"]
+        b = tokens.shape[0]
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x = self.shard(x, ("batch", "seq", "embed"))
+        states = jax.tree.map(
+            lambda z: jnp.broadcast_to(z, (self.cfg.n_layers,) + z.shape),
+            self._zero_mamba_state(b))
+        x, _, _ = self._run(params, x, states)
+        return L.chunked_ce_loss(x, params["final_norm"],
+                                 params["lm_head"], tokens,
+                                 shard=self.shard)
+
+    # -- serving ----------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int) -> dict:
+        cfg = self.cfg
+        cache = {
+            "mamba": jax.tree.map(
+                lambda z: jnp.broadcast_to(
+                    z, (cfg.n_layers,) + z.shape).copy(),
+                self._zero_mamba_state(batch)),
+            "index": jnp.zeros((), dtype=jnp.int32),
+        }
+        ns = self.n_shared()
+        if ns:
+            dtype = jnp.dtype(cfg.dtype)
+            kv_shape = (ns, batch, max_len, cfg.n_kv_heads,
+                        self.attn_dims.head_dim)
+            cache["shared"] = {"k": jnp.zeros(kv_shape, dtype=dtype),
+                               "v": jnp.zeros(kv_shape, dtype=dtype)}
+        return cache
+
+    def prefill(self, params, tokens, cache):
+        """Prefill via full-seq mamba + full attention, then write the
+        shared-attention KV from a replay of the attention inputs.
+
+        For simplicity the shared KV cache is filled by running decode-style
+        attention over the prefix inside the full pass (positions [0, s))."""
+        cfg = self.cfg
+        b, s = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x0 = x
+        states = cache["mamba"]
+        s_max = cache["shared"]["k"].shape[2] if self.n_shared() else 0
+        si = 0
+        new_states, ks, vs = [], [], []
+        for (a, bnd) in self.chunks():
+            sub = jax.tree.map(lambda p: p[a:bnd], params["mamba"])
+            st = jax.tree.map(lambda p: p[a:bnd], states)
+
+            def step(carry, xs):
+                layer, s_l = xs
+                return self._mamba_block(layer, carry, s_l)
+
+            x, st = jax.lax.scan(step, x, (sub, st))
+            new_states.append(st)
+            if (bnd - a) == cfg.shared_attn_every and self.n_shared():
+                p = params["shared"]
+                h = jnp.concatenate([x, x0], axis=-1)
+                h = L.rms_norm(h, p["ln_in"]) @ p["w_in"]
+                a_in = L.rms_norm(h, p["ln1"])
+                positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+                q, k, v = L._qkv(p["attn"], self.attn_dims, a_in, positions,
+                                 self.shard)
+                attn = L._attend(q, k, v, causal=True)
+                attn = attn.reshape(b, s, -1) @ p["attn"]["wo"]
+                h = h + attn
+                h = h + L.swiglu(p["mlp"], L.rms_norm(h, p["ln2"]),
+                                 self.shard)
+                x = x + h
+                pad = [(0, 0), (0, s_max - s), (0, 0), (0, 0)]
+                ks.append(jnp.pad(k, pad))
+                vs.append(jnp.pad(v, pad))
+                si += 1
+        states = jax.tree.map(lambda *t: jnp.concatenate(t), *new_states)
+        x = L.rms_norm(x, params["final_norm"])
+        logits = (x[:, -1:, :] @ params["lm_head"])[:, 0]
+        cache = {"mamba": states, "index": jnp.asarray(s, jnp.int32)}
+        if ks:
+            cache["shared"] = {"k": jnp.stack(ks), "v": jnp.stack(vs)}
+        return logits, cache
+
+    def decode_step(self, params, tokens, cache):
+        b = tokens.shape[0]
+        idx = cache["index"]
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x, states, shared_kv = self._run(
+            params, x, cache["mamba"],
+            shared_kv=cache.get("shared"), idx=idx)
+        x = L.rms_norm(x, params["final_norm"])
+        logits = (x @ params["lm_head"])[:, 0]
+        new_cache = {"mamba": states, "index": idx + 1}
+        if shared_kv is not None:
+            new_cache["shared"] = shared_kv
+        return logits, new_cache

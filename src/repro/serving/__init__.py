@@ -1,0 +1,6 @@
+"""Serving substrate: batched CTR engine + LM generation driver."""
+
+from .engine import CTRServingEngine, ServeStats
+from .generate import generate
+
+__all__ = ["CTRServingEngine", "ServeStats", "generate"]

@@ -1,0 +1,49 @@
+"""LM generation driver: prefill + greedy/temperature decode over any
+architecture exposing (init_cache, prefill, decode_step)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["generate"]
+
+
+def generate(model, params, tokens, *, max_new: int = 32,
+             temperature: float = 0.0, key=None, **prefill_kwargs):
+    """tokens (b, s) -> (b, s + max_new). Greedy when temperature == 0."""
+    b, s = tokens.shape
+    cfg = model.cfg
+    if cfg.family == "encdec":
+        cache = model.init_cache(b, s + max_new,
+                                 prefill_kwargs["frames"].shape[1])
+        logits, cache = model.prefill(params, tokens,
+                                      prefill_kwargs["frames"], cache)
+    elif cfg.family == "ssm":
+        cache = model.init_cache(b, 0)
+        logits, cache = model.prefill(params, tokens, cache)
+    elif cfg.family == "vlm" and "patch_embeds" in prefill_kwargs:
+        s_img = prefill_kwargs["patch_embeds"].shape[1]
+        cache = model.init_cache(b, s_img + s + max_new)
+        logits, cache = model.prefill(
+            params, tokens, cache,
+            patch_embeds=prefill_kwargs["patch_embeds"])
+    else:
+        cache = model.init_cache(b, s + max_new)
+        logits, cache = model.prefill(params, tokens, cache)
+
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    decode = jax.jit(model.decode_step)
+    out = [tokens]
+    for i in range(max_new):
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            nxt = jax.random.categorical(sub, logits / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        nxt = nxt[:, None].astype(tokens.dtype)
+        out.append(nxt)
+        if i < max_new - 1:
+            logits, cache = decode(params, nxt, cache)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,15 @@
+"""Training substrate: optimizer, checkpointing, loop, compression, metrics."""
+
+from .checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from .compression import compressed_psum_mean, make_compressed_dp_step
+from .metrics import logloss, roc_auc
+from .optimizer import AdamWConfig, TrainState, adamw_init, adamw_update
+from .train_loop import TrainLoopConfig, run_train_loop
+
+__all__ = [
+    "latest_step", "restore_checkpoint", "save_checkpoint",
+    "compressed_psum_mean", "make_compressed_dp_step",
+    "logloss", "roc_auc",
+    "AdamWConfig", "TrainState", "adamw_init", "adamw_update",
+    "TrainLoopConfig", "run_train_loop",
+]

@@ -1,0 +1,102 @@
+"""Step-atomic, mesh-agnostic checkpointing (fault tolerance substrate).
+
+Layout: ``<dir>/step_<N>/`` holding one ``.npy`` per pytree leaf (named by
+"/"-joined tree path, escaped) + ``manifest.json`` (paths, shapes, dtypes,
+step). Writes go to ``<dir>/.tmp_step_<N>`` and are atomically ``rename``d —
+a preempted writer never corrupts the latest checkpoint (restart-safety).
+
+Resharding on load: leaves are materialized host-side and ``device_put``
+with the *target* shardings, so a checkpoint taken on one mesh restores
+onto any other (elastic scaling). On a real multi-host pod each host would
+write its shard (same manifest format, per-host files) — single-process
+container writes full arrays; the interface is identical.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any
+
+import numpy as np
+import jax
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+
+
+def _leaf_key(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any) -> str:
+    """Atomic write of ``tree`` under step ``step``. Returns final path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, f".tmp_step_{step}")
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    manifest = {"step": step, "leaves": []}
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for i, (path, leaf) in enumerate(flat):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"leaf_{i:05d}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"].append({
+            "key": _leaf_key(path), "file": fname,
+            "shape": list(arr.shape), "dtype": str(arr.dtype)})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)                     # atomic on POSIX
+    return final
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_"):
+            # only count completed (manifest present) checkpoints
+            if os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")):
+                steps.append(int(name.split("_", 1)[1]))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, target: Any,
+                       shardings: Any = None) -> Any:
+    """Restore into the structure of ``target`` (pytree of arrays or
+    ShapeDtypeStructs). ``shardings`` (same structure, NamedShardings)
+    reshards onto the current mesh."""
+    path = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat_t, treedef = jax.tree_util.tree_flatten(target)
+    if len(manifest["leaves"]) != len(flat_t):
+        raise ValueError(
+            f"checkpoint has {len(manifest['leaves'])} leaves, target has "
+            f"{len(flat_t)} — structure mismatch")
+    flat_s = (jax.tree_util.tree_flatten(shardings)[0]
+              if shardings is not None else [None] * len(flat_t))
+    out = []
+    for meta, tgt, shd in zip(manifest["leaves"], flat_t, flat_s):
+        arr = np.load(os.path.join(path, meta["file"]))
+        if list(arr.shape) != list(tgt.shape):
+            raise ValueError(f"leaf {meta['key']}: checkpoint shape "
+                             f"{arr.shape} != target {tgt.shape}")
+        if shd is not None:
+            out.append(jax.device_put(arr, shd))
+        else:
+            out.append(jax.numpy.asarray(arr, dtype=tgt.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,88 @@
+"""Fault-tolerant training loop: checkpoint/restart, deterministic replay,
+straggler surfacing, preemption-safe writes.
+
+Posture for 1000+ nodes (DESIGN §5): the loop holds NO state outside
+(step, TrainState) — data is step-indexed (restart replays nothing), and
+checkpoints are atomic. ``resume="auto"`` continues from the newest intact
+checkpoint after any crash/preemption. Per-step wall-times are logged and
+steps slower than ``straggler_factor`` × the running median are flagged
+(on real fleets this feeds the scheduler's replace/reshard decision).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Any, Callable
+
+import numpy as np
+import jax
+
+from .checkpoint import latest_step, restore_checkpoint, save_checkpoint
+
+__all__ = ["TrainLoopConfig", "run_train_loop"]
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    total_steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    resume: str = "auto"                # "auto" | "none"
+    log_every: int = 10
+    straggler_factor: float = 3.0
+    keep_ckpts: int = 2
+
+
+def run_train_loop(step_fn: Callable, state: Any, batch_fn: Callable,
+                   cfg: TrainLoopConfig,
+                   shardings: Any = None) -> tuple[Any, list[dict]]:
+    """Run ``total_steps`` of ``step_fn(state, batch) -> (state, metrics)``.
+
+    batch_fn(step) must be a pure function of the step index.
+    Returns (final_state, history).
+    """
+    start = 0
+    if cfg.resume == "auto":
+        last = latest_step(cfg.ckpt_dir)
+        if last is not None:
+            state = restore_checkpoint(cfg.ckpt_dir, last, state, shardings)
+            start = last
+            print(f"[train] resumed from step {start}")
+    history: list[dict] = []
+    durations: list[float] = []
+    for step in range(start, cfg.total_steps):
+        t0 = time.perf_counter()
+        batch = batch_fn(step)
+        state, metrics = step_fn(state, batch)
+        jax.block_until_ready(jax.tree.leaves(metrics)[0])
+        dt = time.perf_counter() - t0
+        durations.append(dt)
+        med = float(np.median(durations[-50:]))
+        if len(durations) > 5 and dt > cfg.straggler_factor * med:
+            print(f"[train] STRAGGLER step {step}: {dt*1e3:.1f}ms "
+                  f"(median {med*1e3:.1f}ms)")
+        rec = {"step": step + 1, "sec": dt,
+               **{k: float(v) for k, v in metrics.items()}}
+        history.append(rec)
+        if (step + 1) % cfg.log_every == 0:
+            print(f"[train] step {rec['step']} "
+                  + " ".join(f"{k}={v:.4f}" for k, v in rec.items()
+                             if k != "step"))
+        if (step + 1) % cfg.ckpt_every == 0 or step + 1 == cfg.total_steps:
+            save_checkpoint(cfg.ckpt_dir, step + 1, state)
+            _gc_checkpoints(cfg.ckpt_dir, cfg.keep_ckpts)
+    return state, history
+
+
+def _gc_checkpoints(ckpt_dir: str, keep: int) -> None:
+    if not os.path.isdir(ckpt_dir):
+        return
+    steps = sorted(
+        int(n.split("_", 1)[1]) for n in os.listdir(ckpt_dir)
+        if n.startswith("step_")
+        and os.path.exists(os.path.join(ckpt_dir, n, "manifest.json")))
+    import shutil
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"), ignore_errors=True)

@@ -1,0 +1,176 @@
+"""Per-kernel allclose validation against the pure-jnp oracles.
+
+Sweeps shapes and dtypes per the deliverable: every Pallas kernel is executed
+in interpret mode (CPU) and compared against repro.kernels.ref.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.kernels.multi_table_lookup import (
+    mtl_gather,
+    mtl_gather_multihot,
+    mtl_input_first,
+    mtl_onehot,
+)
+
+TOL = dict(rtol=1e-5, atol=1e-5)
+BF16_TOL = dict(rtol=2e-2, atol=2e-2)
+
+
+def make_tables(rng, sizes, d, dtype):
+    tables = [jnp.asarray(rng.normal(size=(n, d)), dtype=dtype) for n in sizes]
+    mega = jnp.concatenate(tables, axis=0)
+    offsets = jnp.asarray(np.concatenate([[0], np.cumsum(sizes)[:-1]]),
+                          dtype=jnp.int32)
+    return tables, mega, offsets
+
+
+def make_ids(rng, sizes, b):
+    return jnp.asarray(
+        np.stack([rng.integers(0, n, size=b) for n in sizes], axis=1),
+        dtype=jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 anchoring: literal paper pseudocode == vectorized oracle
+# ---------------------------------------------------------------------------
+
+def test_alg1_literal_matches_vectorized():
+    rng = np.random.default_rng(0)
+    sizes, d, b = [3, 17, 5], 4, 6
+    tables, mega, offsets = make_tables(rng, sizes, d, jnp.float32)
+    ids = make_ids(rng, sizes, b)
+    lit = ref.multi_table_lookup_alg1(np.asarray(ids),
+                                      [np.asarray(t) for t in tables])
+    vec = ref.ref_multi_table_lookup(ids, mega, offsets, len(sizes))
+    np.testing.assert_allclose(lit, vec, **TOL)
+
+
+# ---------------------------------------------------------------------------
+# mtl_gather (output-first, the paper's kernel) — shape × dtype sweep
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("d", [8, 16, 32, 128])
+@pytest.mark.parametrize("b,k", [(4, 2), (16, 5), (32, 9)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mtl_gather_sweep(b, k, d, dtype):
+    rng = np.random.default_rng(b * k * d)
+    sizes = list(rng.integers(2, 50, size=k))
+    _, mega, offsets = make_tables(rng, sizes, d, dtype)
+    ids = make_ids(rng, sizes, b)
+    want = ref.ref_multi_table_lookup(ids, mega, offsets, k)
+    rows = (ids + offsets[None, :]).reshape(-1)
+    got = mtl_gather(rows, mega, interpret=True).reshape(b, k * d)
+    tol = BF16_TOL if dtype == jnp.bfloat16 else TOL
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol)
+
+
+@pytest.mark.parametrize("strategy", ["jnp", "pallas", "serial", "input_first"])
+def test_ops_dispatch_equivalence(strategy):
+    rng = np.random.default_rng(7)
+    sizes, d, b = [11, 3, 40, 8], 16, 24
+    _, mega, offsets = make_tables(rng, sizes, d, jnp.float32)
+    ids = make_ids(rng, sizes, b)
+    want = ref.ref_multi_table_lookup(ids, mega, offsets, len(sizes))
+    got = ops.multi_table_lookup(ids, mega, offsets, strategy=strategy,
+                                 interpret=True)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+def test_input_first_matches_output_first():
+    """Fig.-11 pair must be numerically identical (only layout differs)."""
+    rng = np.random.default_rng(3)
+    sizes, d, b = [9, 21], 8, 10
+    _, mega, offsets = make_tables(rng, sizes, d, jnp.float32)
+    ids = make_ids(rng, sizes, b)
+    a = ops.multi_table_lookup(ids, mega, offsets, strategy="pallas",
+                               interpret=True)
+    z = ops.multi_table_lookup(ids, mega, offsets, strategy="input_first",
+                               interpret=True)
+    np.testing.assert_allclose(a, z, **TOL)
+
+
+# ---------------------------------------------------------------------------
+# one-hot MXU variant
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("d", [8, 32])
+@pytest.mark.parametrize("n_pad", [16, 64])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mtl_onehot_sweep(d, n_pad, dtype):
+    rng = np.random.default_rng(d + n_pad)
+    k, b = 4, 20
+    stacked = jnp.asarray(rng.normal(size=(k, n_pad, d)), dtype=dtype)
+    ids = jnp.asarray(rng.integers(0, n_pad, size=(b, k)), dtype=jnp.int32)
+    got = mtl_onehot(ids, stacked, interpret=True)
+    want = jnp.stack([stacked[f][ids[:, f]] for f in range(k)], axis=1)
+    tol = BF16_TOL if dtype == jnp.bfloat16 else TOL
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol)
+
+
+# ---------------------------------------------------------------------------
+# multi-hot pooling
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("h", [1, 3, 5])
+def test_multihot(h):
+    rng = np.random.default_rng(h)
+    sizes, d, b = [13, 29, 6], 16, 12
+    k = len(sizes)
+    _, mega, offsets = make_tables(rng, sizes, d, jnp.float32)
+    mega_z = jnp.concatenate([mega, jnp.zeros((1, d), jnp.float32)], axis=0)
+    ids = jnp.asarray(
+        np.stack([rng.integers(0, n, size=(b, h)) for n in sizes], axis=1),
+        dtype=jnp.int32)
+    mask = jnp.asarray(rng.integers(0, 2, size=(b, k, h)), dtype=jnp.float32)
+    want = ref.ref_multi_hot_lookup(ids, mask, mega_z, offsets)
+    got = ops.multi_table_lookup_multihot(ids, mask, mega_z, offsets,
+                                          strategy="pallas", interpret=True)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+# ---------------------------------------------------------------------------
+# fused non-GEMM kernels
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,D", [(4, 16), (32, 80), (7, 200)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_cross_v2(b, D, dtype):
+    rng = np.random.default_rng(b * D)
+    x0, xw, x = (jnp.asarray(rng.normal(size=(b, D)), dtype=dtype)
+                 for _ in range(3))
+    got = ops.fused_cross_v2(x0, xw, x, interpret=True)
+    want = ref.ref_cross_v2_elementwise(x0, xw, x)
+    tol = BF16_TOL if dtype == jnp.bfloat16 else TOL
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol)
+
+
+@pytest.mark.parametrize("b,D", [(4, 16), (32, 80)])
+def test_fused_cross_v1(b, D):
+    rng = np.random.default_rng(b + D)
+    x0 = jnp.asarray(rng.normal(size=(b, D)), dtype=jnp.float32)
+    x = jnp.asarray(rng.normal(size=(b, D)), dtype=jnp.float32)
+    bias = jnp.asarray(rng.normal(size=(D,)), dtype=jnp.float32)
+    xlw = jnp.asarray(rng.normal(size=(b, 1)), dtype=jnp.float32)
+    got = ops.fused_cross_v1(x0, xlw, bias, x, interpret=True)
+    want = ref.ref_cross_v1_elementwise(x0, xlw, bias, x)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("b,k,d", [(4, 3, 8), (32, 13, 16), (16, 39, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_fm(b, k, d, dtype):
+    rng = np.random.default_rng(b * k)
+    v = jnp.asarray(rng.normal(size=(b, k, d)), dtype=dtype)
+    got = ops.fused_fm_second_order(v, interpret=True)[:, 0]
+    want = ref.ref_fm_second_order(v.astype(jnp.float32))
+    tol = BF16_TOL if dtype == jnp.bfloat16 else TOL
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol)

@@ -1,0 +1,104 @@
+"""Per-assigned-architecture smoke tests (deliverable f).
+
+Each arch instantiates a REDUCED same-family config (LMConfig.reduced —
+small width/depth/experts/vocab) and runs one forward + one train step on
+CPU asserting output shapes and no NaNs. The FULL configs are exercised via
+the dry-run only (ShapeDtypeStruct, no allocation).
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.models.lm import make_lm_model
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+B, S = 2, 16
+
+
+def _batch(cfg):
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    batch = {"tokens": toks}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            jax.random.PRNGKey(2), (B, S, cfg.d_model),
+            dtype=jnp.dtype(cfg.dtype)) * 0.1
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(3), (B, 4, cfg.d_model),
+            dtype=jnp.dtype(cfg.dtype)) * 0.02
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_reduced_forward_and_train_step(arch):
+    cfg = get_config(arch).reduced()
+    model = make_lm_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+
+    # forward: shape + finiteness
+    if cfg.family == "encdec":
+        logits = model.forward(params, batch["tokens"], batch["frames"])
+        assert logits.shape == (B, S, cfg.vocab)
+    elif cfg.family == "vlm":
+        logits = model.forward(params, batch["tokens"],
+                               batch["patch_embeds"])
+        assert logits.shape == (B, S + 4, cfg.vocab)
+    else:
+        logits = model.forward(params, batch["tokens"])
+        assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+    # one train step: loss finite, params update, no NaNs
+    opt = AdamWConfig(lr=1e-3)
+    state = adamw_init(params, opt)
+    loss, grads = jax.value_and_grad(model.loss)(params, batch)
+    assert np.isfinite(float(loss))
+    state, metrics = adamw_update(state, grads, opt)
+    assert np.isfinite(float(metrics["grad_norm"]))
+    for leaf in jax.tree.leaves(state.params):
+        assert bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "qwen3-4b",
+                                  "phi3.5-moe-42b-a6.6b", "rwkv6-7b",
+                                  "zamba2-1.2b", "whisper-small",
+                                  "pixtral-12b"])
+def test_reduced_decode_matches_forward(arch):
+    """prefill + one decode step == teacher-forced forward (last position)."""
+    cfg = get_config(arch).reduced()
+    if cfg.family == "moe":
+        import dataclasses
+        cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.n_experts))
+    model = make_lm_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    toks = batch["tokens"]
+
+    if cfg.family == "encdec":
+        cache = model.init_cache(B, S + 4, S)
+        lp, cache = model.prefill(params, toks, batch["frames"], cache)
+        full = lambda t: model.forward(params, t, batch["frames"])
+    elif cfg.family == "vlm":
+        cache = model.init_cache(B, 4 + S + 4)
+        lp, cache = model.prefill(params, toks, cache,
+                                  patch_embeds=batch["patch_embeds"])
+        full = lambda t: model.forward(params, t, batch["patch_embeds"])
+    elif cfg.family == "ssm":
+        cache = model.init_cache(B, 0)
+        lp, cache = model.prefill(params, toks, cache)
+        full = lambda t: model.forward(params, t)
+    else:
+        cache = model.init_cache(B, S + 4)
+        lp, cache = model.prefill(params, toks, cache)
+        full = lambda t: model.forward(params, t)
+
+    nxt = jnp.argmax(lp, -1)[:, None].astype(toks.dtype)
+    ld, cache = model.decode_step(params, nxt, cache)
+    ref = full(jnp.concatenate([toks, nxt], axis=1))[:, -1]
+    np.testing.assert_allclose(np.asarray(ld, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=5e-2, atol=5e-2)
