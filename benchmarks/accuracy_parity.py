@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ctr_spec
-from repro.core import DualParallelExecutor
+from repro.core import compile_plan
 from repro.data.synthetic import AVAZU, CRITEO, synthetic_batch
 from repro.models.ctr import CTR_MODELS
 from repro.training.metrics import logloss, roc_auc
@@ -57,9 +57,9 @@ def run(quick: bool = False) -> dict:
                                   steps=20 if quick else 60)
             scores = {}
             for level in ("naive", "dual"):
-                ex = DualParallelExecutor(model.build_graph, level=level)
-                step = ex.build(params)
-                logits = np.asarray(step({"ids": val["ids"]})).reshape(-1)
+                plan = compile_plan(model, params, level,
+                                    int(val["ids"].shape[0]))
+                logits = np.asarray(plan(val["ids"])).reshape(-1)
                 scores[level] = 1.0 / (1.0 + np.exp(-logits))
             # eager vs whole-graph are different XLA programs, so exact bit
             # equality is backend fusion-order luck; the paper's Table-I

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ctr_spec
-from repro.core import DualParallelExecutor
+from repro.core import compile_plan
 from repro.data.synthetic import CRITEO, synthetic_batch
 from repro.models.ctr import CTR_MODELS
 
@@ -42,18 +42,16 @@ def run(quick: bool = False) -> dict:
         params = model.init(jax.random.PRNGKey(0))
         times = {}
         # PyTorch-A: per-field conversion + naive eager execution
-        ex = DualParallelExecutor(model.build_graph, level="naive")
-        step_naive = ex.build(params)
+        plan_naive = compile_plan(model, params, "naive", BATCH)
 
         def pytorch_a(cols):
             converted = [jnp.asarray(c).astype(jnp.int32) for c in cols]
-            return step_naive({"ids": jnp.stack(converted, axis=1)})
+            return plan_naive.step(jnp.stack(converted, axis=1))
 
         times["pytorch_a"] = time_fn(pytorch_a, float_cols, reps=3, warmup=1)
         for tag, level in LEVEL_OF.items():
-            ex = DualParallelExecutor(model.build_graph, level=level)
-            step = ex.build(params)
-            times[tag] = time_fn(step, {"ids": ids}, reps=3, warmup=1)
+            plan = compile_plan(model, params, level, BATCH)
+            times[tag] = time_fn(plan.step, ids, reps=3, warmup=1)
         base = times["pytorch_a"]
         for tag, t in times.items():
             emit(f"breakdown/{model_name}/{tag}", t,

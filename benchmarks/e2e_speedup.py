@@ -14,7 +14,7 @@ import jax.numpy as jnp
 import jax
 
 from repro.configs import ctr_spec
-from repro.core import DualParallelExecutor
+from repro.core import compile_plan
 from repro.data.synthetic import AVAZU, CRITEO, synthetic_batch
 from repro.models.ctr import CTR_MODELS
 
@@ -41,13 +41,11 @@ def run(quick: bool = False) -> dict:
                                     max_field=MAX_FIELD)
                     model = CTR_MODELS[model_name](spec)
                     params = model.init(jax.random.PRNGKey(0))
-                    env = {"ids": batch["ids"]}
+                    ids = batch["ids"]
                     t = {}
                     for level in ("naive", "dual"):
-                        ex = DualParallelExecutor(model.build_graph,
-                                                  level=level)
-                        step = ex.build(params)
-                        t[level] = time_fn(step, env, reps=3, warmup=1)
+                        plan = compile_plan(model, params, level, BATCH)
+                        t[level] = time_fn(plan.step, ids, reps=3, warmup=1)
                     sp = t["naive"] / t["dual"]
                     key = f"{model_name}_{ds_name}_{d}_{h}"
                     results[key] = sp

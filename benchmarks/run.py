@@ -21,7 +21,7 @@ def main() -> None:
 
     from . import (accuracy_parity, breakdown, e2e_speedup,
                    embedding_sensitivity, roofline_report, scheduling,
-                   workload_allocation)
+                   serving_batching, workload_allocation)
     suites = {
         "accuracy_parity": accuracy_parity,       # Table I
         "e2e_speedup": e2e_speedup,               # Fig. 7 / Table II
@@ -29,6 +29,7 @@ def main() -> None:
         "embedding_sensitivity": embedding_sensitivity,  # Fig. 10
         "workload_allocation": workload_allocation,      # Fig. 11
         "scheduling": scheduling,                 # Fig. 12/13
+        "serving_batching": serving_batching,     # Fig. 7 serving policies
         "roofline_report": roofline_report,       # §Roofline
     }
     only = set(args.only.split(",")) if args.only else None

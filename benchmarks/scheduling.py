@@ -14,7 +14,7 @@ from __future__ import annotations
 import jax
 
 from repro.configs import ctr_spec
-from repro.core import DualParallelExecutor
+from repro.core import compile_plan
 from repro.data.synthetic import CRITEO, synthetic_batch
 from repro.models.ctr import CTR_MODELS
 
@@ -57,11 +57,10 @@ def run(quick: bool = False) -> dict:
                               ("breadth_first_A", "implicit_first"),
                               ("breadth_first_B", "explicit_first")]:
             level = "fused_all" if policy == "depth_first" else "dual"
-            ex = DualParallelExecutor(model.build_graph, level=level,
-                                      branch_order=order)
-            step = ex.build(params)
-            t = time_fn(step, {"ids": batch["ids"]}, reps=3, warmup=1)
-            slots = _slots_until_both(ex.stats.queue, model.build_graph,
+            plan = compile_plan(model, params, level, BATCH,
+                                branch_order=order)
+            t = time_fn(plan.step, batch["ids"], reps=3, warmup=1)
+            slots = _slots_until_both(plan.stats.queue, model.build_graph,
                                       params)
             emit(f"sched/{model_name}/{policy}", t,
                  f"slots_until_both_branches={slots}")

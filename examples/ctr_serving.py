@@ -1,8 +1,11 @@
 """Batched CTR serving demo — the paper's deployment scenario.
 
-Trains DCN briefly, then serves 2,000 single-sample requests through the
-CTRServingEngine (dynamic batching + DPIFrame dual-parallel executor) and
-prints throughput/latency stats next to the naive-executor configuration.
+Trains nothing (random params suffice for throughput numbers); serves 2,000
+single-sample requests arriving in mixed-size waves through the
+InferenceEngine, comparing the legacy pad-to-256 FixedBatch against
+BucketedBatch (one cached InferencePlan per bucket) at the naive and dual
+executor levels, and prints throughput/latency plus the engine's plan-cache
+and padding-waste counters.
 
 Run:  PYTHONPATH=src python examples/ctr_serving.py
 """
@@ -13,13 +16,13 @@ import numpy as np
 import jax
 
 from repro.configs import ctr_spec
-from repro.data.synthetic import CRITEO, synthetic_batch
+from repro.data.synthetic import CRITEO
 from repro.models.ctr import DCN
-from repro.serving import CTRServingEngine
+from repro.serving import BucketedBatch, FixedBatch, InferenceEngine
 
 MAX_FIELD = 100_000
 N_REQUESTS = 2_000
-BATCH = 256
+LADDER = (32, 64, 128, 256)
 
 schema = CRITEO.scaled(MAX_FIELD)
 spec = ctr_spec("dcn", "criteo", embed_dim=16, hidden=256,
@@ -30,17 +33,29 @@ params = model.init(jax.random.PRNGKey(0))
 rng = np.random.default_rng(0)
 requests = [np.array([rng.integers(0, s) for s in schema.field_sizes],
                      dtype=np.int32) for _ in range(N_REQUESTS)]
+# mixed-size arrival waves: bursts of 256 down to straggler handfuls
+waves, i = [], 0
+for size in (256, 256, 512, 96, 640, 130, 70, 17, 19, 4):
+    waves.append(requests[i:i + size])
+    i += size
 
 for level in ("naive", "dual"):
-    eng = CTRServingEngine(model, params, batch_size=BATCH, level=level)
-    eng.warmup()
-    t0 = time.perf_counter()
-    for r in requests:
-        eng.submit(r)
-    scores = eng.serve_pending()
-    dt = time.perf_counter() - t0
-    s = eng.stats
-    print(f"{level:6s}: {N_REQUESTS/dt:8.0f} req/s   "
-          f"p50={s.p50_ms:7.1f}ms p99={s.p99_ms:7.1f}ms   "
-          f"batches={s.n_batches} compute={s.compute_ms_total:6.1f}ms")
+    for policy in (FixedBatch(256), BucketedBatch(LADDER)):
+        eng = InferenceEngine(model, params, level=level, policy=policy)
+        eng.warmup()
+        t0 = time.perf_counter()
+        scores = []
+        for wave in waves:
+            eng.submit_many(wave)
+            scores.append(eng.serve_pending())
+        scores = np.concatenate(scores)
+        dt = time.perf_counter() - t0
+        s = eng.stats
+        name = type(policy).__name__
+        print(f"{level:6s}/{name:13s}: {N_REQUESTS/dt:8.0f} req/s  "
+              f"p50={s.p50_ms:6.1f}ms p99={s.p99_ms:6.1f}ms  "
+              f"batches={s.n_batches:3d}  plans={len(eng.cached_plans)}  "
+              f"pad_waste={s.padding_waste:5.1%}  "
+              f"cache h/m={s.cache_hits}/{s.cache_misses}")
+
 print("sample scores:", np.round(scores[:5], 4))

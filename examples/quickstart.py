@@ -1,9 +1,11 @@
 """Quickstart: DPIFrame in ~40 lines.
 
-Builds DCNv2 on the (synthetic) Criteo schema, runs the same params through
-all four executor levels (naive → DPIFrame-C), and shows: identical outputs
+Builds DCNv2 on the (synthetic) Criteo schema, compiles one InferencePlan
+per executor level (naive → DPIFrame-C), and shows: identical outputs
 (Table-I property), the kernel-count reduction from non-GEMM fusion, and the
-breadth-first schedule.
+breadth-first schedule. ``compile_plan`` is the single compile surface —
+the returned plan carries the fused graph, the schedule, and an AOT-compiled
+step function.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -12,26 +14,28 @@ import numpy as np
 import jax
 
 from repro.configs import ctr_spec
-from repro.core import DualParallelExecutor
+from repro.core import compile_plan
 from repro.data.synthetic import CRITEO, synthetic_batch
 from repro.models.ctr import DCNv2
+
+BATCH = 256
 
 spec = ctr_spec("dcnv2", "criteo", embed_dim=16, hidden=256,
                 max_field=50_000)
 model = DCNv2(spec)
 params = model.init(jax.random.PRNGKey(0))
-batch = synthetic_batch(CRITEO.scaled(50_000), step=0, batch=256)
+batch = synthetic_batch(CRITEO.scaled(50_000), step=0, batch=BATCH)
 
 outputs = {}
 for level in ("naive", "fused_emb", "fused_all", "dual"):
-    ex = DualParallelExecutor(model.build_graph, level=level)
-    step = ex.build(params)
-    outputs[level] = np.asarray(step({"ids": batch["ids"]}))
-    st = ex.stats
+    plan = compile_plan(model, params, level, BATCH)
+    outputs[level] = np.asarray(plan(batch["ids"]))
+    st = plan.stats
     print(f"{level:10s} ops {st.n_ops_before:2d} -> {st.n_ops_after:2d}  "
-          f"fused_groups={st.n_fused_groups}  policy={st.schedule_policy}")
+          f"fused_groups={st.n_fused_groups}  policy={st.schedule_policy}  "
+          f"compile={plan.compile_ms:6.0f}ms")
 
-print("\nbreadth-first queue:", " | ".join(ex.stats.queue[:6]), "...")
+print("\nbreadth-first queue:", " | ".join(plan.stats.queue[:6]), "...")
 for level, out in outputs.items():
     assert np.allclose(out, outputs["naive"], rtol=1e-5, atol=1e-6), level
 print("\nall levels numerically identical — the paper's Table-I property")

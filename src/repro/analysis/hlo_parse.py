@@ -163,6 +163,14 @@ def parse_hlo(text: str) -> HLOStats:
     return stats
 
 
+# lhs operand of a dot: an optional inline shape literal (newer HLO text
+# prints ``dot(f32[8,8]{1,0} %lhs, ...)``; TPU layouts carry tiling such as
+# ``{1,0:T(8,128)}``) followed by the operand name
+_DOT_LHS = re.compile(
+    r"dot\(\s*(?:[a-z0-9]+\[(?P<dims>[0-9,]*)\](?:\{[^}]*\})?\s+)?"
+    r"%?(?P<name>[\w.\-]+)")
+
+
 def _dot_flops(sig: str, result_sig: dict[str, str]) -> float:
     """2 · prod(result) · K from the dot signature + operand lookup."""
     dt, rdims = _first_shape(sig)
@@ -170,15 +178,18 @@ def _dot_flops(sig: str, result_sig: dict[str, str]) -> float:
         return 0.0
     out_elems = math.prod(rdims) if rdims else 1
     # contraction size: lhs operand shape at lhs_contracting_dims
-    ops = re.search(r"dot\(%?([\w.\-]+)", sig)
+    ops = _DOT_LHS.search(sig)
     cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", sig)
     k = 1
     if ops and cm and cm.group(1):
-        lhs_sig = result_sig.get(ops.group(1))
-        if lhs_sig:
-            _, ldims = _first_shape(lhs_sig)
-            for ci in cm.group(1).split(","):
-                ci = int(ci)
-                if ci < len(ldims):
-                    k *= ldims[ci]
+        if ops.group("dims") is not None:          # inline operand shape
+            ldims = [int(d) for d in ops.group("dims").split(",")
+                     ] if ops.group("dims") else []
+        else:                                       # name-only: look it up
+            lhs_sig = result_sig.get(ops.group("name"), "")
+            _, ldims = _first_shape(lhs_sig) if lhs_sig else (None, [])
+        for ci in cm.group(1).split(","):
+            ci = int(ci)
+            if ci < len(ldims):
+                k *= ldims[ci]
     return 2.0 * out_elems * k

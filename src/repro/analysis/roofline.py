@@ -68,7 +68,8 @@ def analyze_cell(arch: str, shape: str, mesh_name: str, chips: int,
                  compiled, n_micro: int = 1) -> RooflineReport:
     text = compiled.as_text()
     stats = parse_hlo(text)
-    ca = compiled.cost_analysis() or {}
+    from repro.compat import cost_analysis
+    ca = cost_analysis(compiled)
     ma = compiled.memory_analysis()
     an = analytic_cost(arch, shape, chips, n_micro)
 

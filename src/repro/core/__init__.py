@@ -4,9 +4,13 @@
   opgraph.py          C5: operator DAG + non-GEMM fusion pass
   scheduler.py        C4: breadth-first stream scheduling (Alg. 2)
   dual_parallel.py    C1: the dual-parallel executor (Fig.-8 levels)
+  plan.py             compile_plan → InferencePlan, the compiled artifact
+                      consumed by repro.serving.InferenceEngine
 """
 
-from .dual_parallel import LEVELS, DualParallelExecutor
+from .dual_parallel import (BRANCH_ORDERS, LEVELS, DualParallelExecutor,
+                            ExecutorStats)
+from .plan import InferencePlan, PlanKey, compile_plan
 from .fused_embedding import (FusedEmbeddingCollection, FusedEmbeddingSpec,
                               sharded_vocab_lookup)
 from .opgraph import Op, FusedOp, OpGraph, fuse_non_gemm, register_fused_kernel
@@ -15,7 +19,12 @@ from .scheduler import (breadth_first_schedule, depth_first_schedule,
 
 __all__ = [
     "LEVELS",
+    "BRANCH_ORDERS",
     "DualParallelExecutor",
+    "ExecutorStats",
+    "InferencePlan",
+    "PlanKey",
+    "compile_plan",
     "FusedEmbeddingCollection",
     "FusedEmbeddingSpec",
     "sharded_vocab_lookup",

@@ -35,9 +35,10 @@ from .opgraph import OpGraph, fuse_non_gemm, op_outputs
 from .scheduler import (breadth_first_schedule, depth_first_schedule,
                         full_order)
 
-__all__ = ["DualParallelExecutor", "LEVELS"]
+__all__ = ["DualParallelExecutor", "ExecutorStats", "LEVELS", "BRANCH_ORDERS"]
 
 LEVELS = ("naive", "fused_emb", "fused_all", "dual")
+BRANCH_ORDERS = ("longer_first", "explicit_first", "implicit_first")
 
 
 @dataclasses.dataclass
@@ -67,6 +68,9 @@ class DualParallelExecutor:
                  level: str = "dual", branch_order: str = "longer_first"):
         if level not in LEVELS:
             raise ValueError(f"level must be one of {LEVELS}, got {level!r}")
+        if branch_order not in BRANCH_ORDERS:
+            raise ValueError(f"branch_order must be one of {BRANCH_ORDERS}, "
+                             f"got {branch_order!r}")
         self.graph_builder = graph_builder
         self.level = level
         self.branch_order = branch_order
@@ -81,16 +85,13 @@ class DualParallelExecutor:
         explicit = graph.by_module("explicit")
         implicit = graph.by_module("implicit")
         if self.level == "dual":
-            if self.branch_order == "longer_first":
-                sched = breadth_first_schedule(explicit, implicit)
-            elif self.branch_order == "explicit_first":
-                sched = breadth_first_schedule(explicit, implicit,
-                                               longer_first=len(explicit) >= len(implicit))
-            elif self.branch_order == "implicit_first":
-                sched = breadth_first_schedule(explicit, implicit,
-                                               longer_first=len(implicit) >= len(explicit))
-            else:
-                raise ValueError(self.branch_order)
+            # "explicit_first"/"implicit_first" pin the head branch
+            # deterministically (equal-length branches included); only
+            # "longer_first" lets Alg. 2 pick by branch length.
+            first = {"longer_first": "longer",
+                     "explicit_first": "explicit",
+                     "implicit_first": "implicit"}[self.branch_order]
+            sched = breadth_first_schedule(explicit, implicit, first=first)
         else:
             sched = depth_first_schedule(explicit, implicit)
         order = full_order(graph, sched)
@@ -116,6 +117,15 @@ class DualParallelExecutor:
     def build(self, params: Any) -> Callable[[dict[str, Any]], Any]:
         """Returns ``step(inputs_env) -> output`` at the configured level."""
         graph, order = self.prepare(params)
+        return self.make_step(graph, order)
+
+    def make_step(self, graph: OpGraph, order: list[str], *,
+                  donate: bool = False) -> Callable[[dict[str, Any]], Any]:
+        """Turn a prepared (graph, order) into ``step(inputs_env) -> output``.
+
+        Split from :meth:`build` so ``repro.core.plan.compile_plan`` can
+        AOT-lower the returned jit without re-preparing the graph.
+        """
         ops_in_order = [graph.op(n) for n in order]
         out_edge = ops_in_order[-1].output
 
@@ -124,7 +134,7 @@ class DualParallelExecutor:
             def whole(env):
                 e = graph.execute(env, order)
                 return e[out_edge]
-            return jax.jit(whole)
+            return jax.jit(whole, donate_argnums=(0,) if donate else ())
 
         # eager op-by-op dispatch: each op is its own jit call (its own
         # device dispatch), mirroring per-kernel launch overhead

@@ -1,0 +1,194 @@
+"""InferencePlan — the immutable compiled artifact of the serving stack.
+
+The repo's execution API has three explicit layers (HugeCTR's inference
+parameter server and PCDF's parallel-computing serving framework follow the
+same decomposition):
+
+  1. **compile** — :func:`compile_plan` turns (model, params, level,
+     batch shape) into an :class:`InferencePlan` once: the fused ``OpGraph``,
+     the breadth-first schedule, the ``ExecutorStats`` bookkeeping, and a
+     runnable step. At level ``"dual"`` the step is AOT-lowered and
+     compiled via ``jax.jit(...).lower(...).compile()`` so the first served
+     request never pays trace/compile time; the other Fig.-8 levels keep
+     their deliberate op-by-op dispatch but have every per-op jit warmed.
+  2. **plan** — the ``InferencePlan`` is immutable and batch-shape-specific;
+     it can be cached, shipped across engines, and called directly
+     (``plan(ids) -> logits``, ``plan.predict(ids) -> scores``).
+  3. **engine** — ``repro.serving.engine.InferenceEngine`` owns a cache of
+     plans keyed by ``(model, level, batch_bucket)`` plus a pluggable
+     batching policy (``repro.serving.batching``).
+
+With ``mesh=`` the embedding mega-tables are placed row-sharded
+(vocab-parallel, the ``FusedEmbeddingCollection.partition_spec`` placement)
+over the mesh's model axis before tracing, so the compiled program runs
+under GSPMD.
+
+``DualParallelExecutor`` remains the graph-preparation machinery underneath;
+user code should not need to touch it directly anymore.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .dual_parallel import (BRANCH_ORDERS, LEVELS, DualParallelExecutor,
+                            ExecutorStats)
+from .opgraph import OpGraph
+
+__all__ = ["PlanKey", "InferencePlan", "compile_plan", "plan_key_for"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanKey:
+    """Cache identity of a compiled plan (the engine's cache key)."""
+    model: str
+    level: str
+    batch_size: int
+    branch_order: str = "longer_first"
+    sharded: bool = False
+
+
+def plan_key_for(model, level: str, batch_size: int,
+                 branch_order: str = "longer_first",
+                 sharded: bool = False) -> PlanKey:
+    """The single definition of plan/cache identity — used both by
+    :func:`compile_plan` (stamped on the plan) and by engines keying their
+    caches, so the two can never drift."""
+    return PlanKey(model=getattr(model.spec, "name", type(model).__name__),
+                   level=level, batch_size=int(batch_size),
+                   branch_order=branch_order, sharded=sharded)
+
+
+@dataclasses.dataclass(frozen=True)
+class InferencePlan:
+    """One compiled, batch-shape-specific inference artifact.
+
+    ``step`` maps ``ids (batch_size, n_fields) int32 -> logits``; it is the
+    AOT-compiled executable at level "dual" and the warmed eager chain at
+    the other levels. Plans are immutable: recompile to change anything.
+    """
+    key: PlanKey
+    stats: ExecutorStats
+    graph: OpGraph
+    order: tuple[str, ...]
+    step: Callable[[jax.Array], jax.Array]
+    n_fields: int
+    donate: bool
+    compile_ms: float
+
+    @property
+    def level(self) -> str:
+        return self.key.level
+
+    @property
+    def batch_size(self) -> int:
+        return self.key.batch_size
+
+    def __call__(self, ids: jax.Array) -> jax.Array:
+        return self.step(ids)
+
+    def predict(self, ids) -> np.ndarray:
+        """Sigmoid scores for ``ids`` ((n_fields,) or (b, n_fields) with
+        b ≤ batch_size); pads up to the plan's batch shape and slices the
+        padding back off."""
+        ids = np.asarray(ids, dtype=np.int32)
+        if ids.ndim == 1:
+            ids = ids[None, :]
+        b = ids.shape[0]
+        if b > self.batch_size:
+            raise ValueError(
+                f"{b} rows > plan batch_size {self.batch_size}; use an "
+                "InferenceEngine (it batches) or compile a bigger plan")
+        if b < self.batch_size:
+            pad = np.zeros((self.batch_size - b, ids.shape[1]),
+                           dtype=ids.dtype)
+            ids = np.concatenate([ids, pad])
+        logits = self.step(jnp.asarray(ids))
+        return np.asarray(
+            jax.nn.sigmoid(jnp.reshape(jnp.asarray(logits), (-1,))))[:b]
+
+
+def _shard_params(params: Any, mesh: jax.sharding.Mesh,
+                  model_axis: str) -> Any:
+    """Place params on ``mesh``: embedding mega-tables row-sharded over the
+    model axis (when their height divides), everything else replicated."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    n_shards = dict(zip(mesh.axis_names, mesh.devices.shape))[model_axis]
+
+    def place(path, leaf):
+        names = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                         for p in path)
+        spec = P()
+        if ("mega" in names and getattr(leaf, "ndim", 0) == 2
+                and leaf.shape[0] % n_shards == 0):
+            spec = P(model_axis, None)
+        return jax.device_put(leaf, NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map_with_path(place, params)
+
+
+def compile_plan(model, params: Any, level: str = "dual",
+                 batch_size: int = 256, *,
+                 mesh: jax.sharding.Mesh | None = None,
+                 donate: bool = False,
+                 branch_order: str = "longer_first",
+                 model_axis: str = "model") -> InferencePlan:
+    """Compile one (model, level, batch shape) into an InferencePlan.
+
+    Args:
+        model: a ``CTRModel`` (anything with ``spec.k`` and
+            ``build_graph(params, level)``).
+        params: the model's parameter pytree.
+        level: one of ``repro.core.LEVELS`` (the Fig.-8 ladder).
+        batch_size: the fixed batch shape this plan serves.
+        mesh: optional device mesh; mega-tables are row-sharded over its
+            ``model_axis`` before tracing (vocab-parallel placement).
+        donate: donate the input buffer to the compiled step (XLA may
+            reuse it; callers must treat submitted arrays as consumed).
+            Only meaningful at level ``"dual"`` — the eager levels dispatch
+            op-by-op and ignore it.
+        branch_order: breadth-first head-branch policy (§V-H ablations).
+    """
+    if level not in LEVELS:
+        raise ValueError(f"level must be one of {LEVELS}, got {level!r}")
+    if branch_order not in BRANCH_ORDERS:
+        raise ValueError(f"branch_order must be one of {BRANCH_ORDERS}, "
+                         f"got {branch_order!r}")
+    if mesh is not None:
+        params = _shard_params(params, mesh, model_axis)
+
+    executor = DualParallelExecutor(model.build_graph, level=level,
+                                    branch_order=branch_order)
+    t0 = time.perf_counter()
+    graph, order = executor.prepare(params)
+    step_env = executor.make_step(graph, order, donate=donate)
+    n_fields = model.spec.k
+
+    if level == "dual":
+        # AOT: lower + compile the whole-graph program now, not on first use
+        spec = {"ids": jax.ShapeDtypeStruct((batch_size, n_fields),
+                                            jnp.int32)}
+        compiled = step_env.lower(spec).compile()
+
+        def step(ids: jax.Array) -> jax.Array:
+            return compiled({"ids": ids})
+    else:
+        # eager levels dispatch op-by-op on purpose; warm every per-op jit
+        # so serving latency never includes compiles
+        def step(ids: jax.Array) -> jax.Array:
+            return step_env({"ids": ids})
+        jax.block_until_ready(
+            step(jnp.zeros((batch_size, n_fields), dtype=jnp.int32)))
+    compile_ms = (time.perf_counter() - t0) * 1e3
+
+    key = plan_key_for(model, level, batch_size, branch_order,
+                       sharded=mesh is not None)
+    return InferencePlan(key=key, stats=executor.stats, graph=graph,
+                         order=tuple(order), step=step, n_fields=n_fields,
+                         donate=donate, compile_ms=compile_ms)

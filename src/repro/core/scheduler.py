@@ -53,16 +53,20 @@ class Schedule:
 
 
 def breadth_first_schedule(explicit: Sequence[Op | FusedOp],
-                           implicit: Sequence[Op | FusedOp],
-                           longer_first: bool = True) -> Schedule:
+                           implicit: Sequence[Op | FusedOp], *,
+                           first: str = "longer") -> Schedule:
     """Literal transcription of Algorithm 2.
 
     Args:
         explicit: ops of the explicit interaction module (in branch order).
         implicit: ops of the implicit interaction module.
-        longer_first: paper behaviour — "the module that has more operators
-            launches first … it can help hide the startup costs"; setting
-            False flips the tie order (the §V-H startup-sequence ablation).
+        first: which branch heads the queue — ``"longer"`` (Alg.-2 default:
+            "the module that has more operators launches first … it can
+            help hide the startup costs"; ties go to explicit),
+            ``"shorter"`` (the flipped ablation), or ``"explicit"`` /
+            ``"implicit"`` (the §V-H startup-sequence ablations,
+            deterministic regardless of branch lengths — including
+            equal-length branches).
 
     Returns:
         Schedule with S_explicit / S_implicit streams and interleaved Q.
@@ -76,17 +80,25 @@ def breadth_first_schedule(explicit: Sequence[Op | FusedOp],
     s_explicit.add(ops_explicit)                         # line 7
     s_implicit.add(ops_implicit)                         # line 8
     queue: list[str] = []
-    # line 9: the module with more operators launches first
-    longer, shorter = ((ops_implicit, ops_explicit) if n_implicit > n_explicit
-                       else (ops_explicit, ops_implicit))
-    if not longer_first:
-        # §V-H ablation: start with the *other* branch regardless of length
-        longer, shorter = shorter, longer
-    for i in range(min(len(longer), len(shorter))):      # lines 9–13 / 18–22
-        queue.append(longer[i])
-        queue.append(shorter[i])
-    tail = longer if len(longer) >= len(shorter) else shorter
-    for j in range(min(len(longer), len(shorter)), len(tail)):  # 14–16 / 23–25
+    if first == "explicit":
+        head, tail_b = ops_explicit, ops_implicit
+    elif first == "implicit":
+        head, tail_b = ops_implicit, ops_explicit
+    elif first in ("longer", "shorter"):
+        # line 9: the module with more operators launches first
+        head, tail_b = ((ops_implicit, ops_explicit)
+                        if n_implicit > n_explicit
+                        else (ops_explicit, ops_implicit))
+        if first == "shorter":
+            head, tail_b = tail_b, head
+    else:
+        raise ValueError(f"first must be 'longer', 'shorter', 'explicit' "
+                         f"or 'implicit', got {first!r}")
+    for i in range(min(len(head), len(tail_b))):         # lines 9–13 / 18–22
+        queue.append(head[i])
+        queue.append(tail_b[i])
+    tail = head if len(head) >= len(tail_b) else tail_b
+    for j in range(min(len(head), len(tail_b)), len(tail)):  # 14–16 / 23–25
         queue.append(tail[j])
     return Schedule(streams={"S_explicit": s_explicit,
                              "S_implicit": s_implicit},

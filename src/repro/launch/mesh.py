@@ -12,15 +12,15 @@ from __future__ import annotations
 
 import jax
 
+from repro.compat import make_mesh
+
 __all__ = ["make_production_mesh", "make_test_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_test_mesh(data: int = 2, model: int = 2,
@@ -28,9 +28,5 @@ def make_test_mesh(data: int = 2, model: int = 2,
     """Small mesh for CI-scale sharding tests (requires
     --xla_force_host_platform_device_count >= data*model*(pod or 1))."""
     if pod:
-        return jax.make_mesh(
-            (pod, data, model), ("pod", "data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 3)
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        return make_mesh((pod, data, model), ("pod", "data", "model"))
+    return make_mesh((data, model), ("data", "model"))

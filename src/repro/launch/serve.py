@@ -1,7 +1,11 @@
 """Serving driver: CTR engine or LM generation, reduced-config CPU-runnable.
 
     PYTHONPATH=src python -m repro.launch.serve --mode ctr --model dcnv2
+    PYTHONPATH=src python -m repro.launch.serve --mode ctr --policy bucketed
     PYTHONPATH=src python -m repro.launch.serve --mode lm --arch llama3-8b
+
+The CTR path is the compile→plan→engine flow: an ``InferenceEngine`` owning
+a plan cache and a batching policy picked by ``--policy``.
 """
 
 import argparse
@@ -12,26 +16,39 @@ import jax
 from repro.configs import ARCH_NAMES, ctr_spec, get_config
 
 
+def _make_policy(args):
+    from repro.serving import BucketedBatch, FixedBatch, TimeoutBatch
+    ladder = tuple(int(b) for b in args.buckets.split(","))
+    if args.policy == "fixed":
+        return FixedBatch(args.batch)
+    if args.policy == "bucketed":
+        return BucketedBatch(ladder)
+    return TimeoutBatch(BucketedBatch(ladder), max_wait_ms=args.max_wait_ms)
+
+
 def serve_ctr(args) -> None:
     from repro.data.synthetic import CRITEO
     from repro.models.ctr import CTR_MODELS
-    from repro.serving import CTRServingEngine
+    from repro.serving import InferenceEngine
     schema = CRITEO.scaled(100_000)
     spec = ctr_spec(args.model, "criteo", 16, 256, max_field=100_000)
     model = CTR_MODELS[args.model](spec)
     params = model.init(jax.random.PRNGKey(0))
-    eng = CTRServingEngine(model, params, batch_size=args.batch,
-                           level="dual")
+    eng = InferenceEngine(model, params, level=args.level,
+                          policy=_make_policy(args))
     eng.warmup()
     rng = np.random.default_rng(0)
     for _ in range(args.requests):
         eng.submit(np.array([rng.integers(0, s)
                              for s in schema.field_sizes], dtype=np.int32))
-    scores = eng.serve_pending()
+    scores = np.concatenate([eng.serve_pending(), eng.flush()])
     s = eng.stats
-    print(f"[serve] {args.model}: {s.n_requests} requests in "
-          f"{s.n_batches} batches  p50={s.p50_ms:.1f}ms "
-          f"p99={s.p99_ms:.1f}ms  mean_score={scores.mean():.4f}")
+    print(f"[serve] {args.model} level={args.level} policy={args.policy}: "
+          f"{s.n_requests} requests in {s.n_batches} batches  "
+          f"p50={s.p50_ms:.1f}ms p99={s.p99_ms:.1f}ms  "
+          f"plans={len(eng.cached_plans)} cache_h/m="
+          f"{s.cache_hits}/{s.cache_misses} pad_waste={s.padding_waste:.1%} "
+          f"mean_score={scores.mean():.4f}")
 
 
 def serve_lm(args) -> None:
@@ -53,6 +70,13 @@ def main() -> None:
     ap.add_argument("--model", default="dcnv2")
     ap.add_argument("--arch", default="llama3-8b", choices=list(ARCH_NAMES))
     ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--level", default="dual",
+                    choices=["naive", "fused_emb", "fused_all", "dual"])
+    ap.add_argument("--policy", default="bucketed",
+                    choices=["fixed", "bucketed", "timeout"])
+    ap.add_argument("--buckets", default="16,32,64,128,256",
+                    help="comma-separated bucket ladder for bucketed/timeout")
+    ap.add_argument("--max-wait-ms", type=float, default=5.0)
     ap.add_argument("--requests", type=int, default=500)
     ap.add_argument("--max-new", type=int, default=16)
     args = ap.parse_args()

@@ -188,8 +188,23 @@ class CTRModel:
         raise NotImplementedError
 
     # shared -------------------------------------------------------------------
+    def compile(self, params: dict, level: str = "dual",
+                batch_size: int = 256, **kwargs):
+        """Compile this model into an ``InferencePlan`` (the serving-side
+        artifact): ``plan = model.compile(params); plan.predict(ids)``.
+        Thin delegation to :func:`repro.core.plan.compile_plan`; serving
+        deployments should hold plans (or an ``InferenceEngine``) rather
+        than calling :meth:`apply` per request."""
+        from repro.core.plan import compile_plan
+        return compile_plan(self, params, level, batch_size, **kwargs)
+
     def apply(self, params: dict, ids: jax.Array) -> jax.Array:
-        """Differentiable forward = whole graph in breadth-first order."""
+        """Differentiable forward = whole graph in breadth-first order.
+
+        This is the *training* path (traceable under jit/grad). For
+        inference use :meth:`compile` / ``InferenceEngine`` — they own
+        compiled, batch-shaped artifacts instead of re-executing the graph
+        eagerly per call."""
         g = self.build_graph(params, "dual")
         env = g.execute({"ids": ids})
         return env["logit"]

@@ -19,7 +19,8 @@ from typing import Callable
 import numpy as np
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+
+from repro.compat import shard_map
 
 Shard = Callable[[jax.Array, tuple[str | None, ...]], jax.Array]
 

@@ -1,6 +1,23 @@
-"""Serving substrate: batched CTR engine + LM generation driver."""
+"""Serving substrate: plan-cached batched CTR engine + LM generation.
 
-from .engine import CTRServingEngine, ServeStats
+CTR flow:  ``compile_plan`` (repro.core.plan) → ``InferencePlan`` →
+``InferenceEngine`` (plan cache + pluggable batching policy).
+"""
+
+from .batching import (BatchDecision, BatchPolicy, BucketedBatch, FixedBatch,
+                       TimeoutBatch)
+from .engine import CTRServingEngine, EngineStats, InferenceEngine, ServeStats
 from .generate import generate
 
-__all__ = ["CTRServingEngine", "ServeStats", "generate"]
+__all__ = [
+    "InferenceEngine",
+    "EngineStats",
+    "BatchPolicy",
+    "BatchDecision",
+    "FixedBatch",
+    "BucketedBatch",
+    "TimeoutBatch",
+    "CTRServingEngine",
+    "ServeStats",
+    "generate",
+]

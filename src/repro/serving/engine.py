@@ -1,35 +1,58 @@
-"""Batched CTR inference engine — the paper's deployment surface.
+"""InferenceEngine — the single serving surface over compiled plans.
 
-Requests (one sample each: per-field id vectors) are queued and served in
-fixed-size batches through a DualParallelExecutor at any Fig.-8 level;
-under-full batches are padded (padding rows sliced off the response).
-Latency accounting distinguishes queueing from compute — the numbers the
-paper's Fig. 7 measures.
+The deployment story (paper Fig. 7) as three layers:
+
+    plan  = compile_plan(model, params, "dual", 256)   # repro.core.plan
+    eng   = InferenceEngine(model, params, policy=BucketedBatch())
+    eng.submit(row); scores = eng.serve_pending()      # or eng.predict(ids)
+
+The engine owns
+
+* a **plan cache** keyed by ``(model, level, batch_bucket)`` — each batching
+  bucket compiles once and is reused for every later batch of that shape
+  (hit/miss counts are in ``stats``);
+* a **batching policy** (``repro.serving.batching``) deciding how queued
+  single-sample requests group into padded device batches;
+* **latency accounting** separating queueing from compute, plus per-bucket
+  compile counts and padding-waste fractions so benchmarks can quantify the
+  bucketing win.
+
+``CTRServingEngine`` (the old fixed-batch surface) remains as a deprecated
+shim: ``InferenceEngine`` with ``FixedBatch(batch_size)``.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
+import warnings
 from collections import deque
 from typing import Sequence
 
 import numpy as np
 import jax
-import jax.numpy as jnp
 
-from repro.core import DualParallelExecutor
-from repro.models.ctr.common import CTRModel
+from repro.core.plan import InferencePlan, PlanKey, compile_plan, plan_key_for
+from .batching import BatchPolicy, BucketedBatch, FixedBatch
 
-__all__ = ["CTRServingEngine", "ServeStats"]
+__all__ = ["InferenceEngine", "EngineStats", "CTRServingEngine",
+           "ServeStats"]
 
 
 @dataclasses.dataclass
-class ServeStats:
+class EngineStats:
+    """Serving counters: request/batch totals, latency split, plan-cache
+    behaviour, and padding waste per bucket."""
     n_requests: int = 0
     n_batches: int = 0
     compute_ms_total: float = 0.0
     latency_ms: list = dataclasses.field(default_factory=list)
+    cache_hits: int = 0
+    cache_misses: int = 0
+    compile_ms_per_bucket: dict = dataclasses.field(default_factory=dict)
+    batches_per_bucket: dict = dataclasses.field(default_factory=dict)
+    padded_rows_total: int = 0
 
     @property
     def p50_ms(self) -> float:
@@ -39,52 +62,163 @@ class ServeStats:
     def p99_ms(self) -> float:
         return float(np.percentile(self.latency_ms, 99)) if self.latency_ms else 0.0
 
+    @property
+    def padding_waste(self) -> float:
+        """Fraction of served device rows that were padding."""
+        rows = self.n_requests + self.padded_rows_total
+        return self.padded_rows_total / rows if rows else 0.0
 
-class CTRServingEngine:
-    def __init__(self, model: CTRModel, params: dict, *, batch_size: int = 256,
-                 level: str = "dual", branch_order: str = "longer_first"):
+
+# deprecated alias — the old engine exported its stats under this name
+ServeStats = EngineStats
+
+
+class InferenceEngine:
+    """Batched CTR inference over a cache of compiled ``InferencePlan``s.
+
+    Args:
+        model: any CTR model (``spec`` + ``build_graph``).
+        params: parameter pytree.
+        level: Fig.-8 executor level for every plan this engine compiles.
+        policy: batching policy; default ``BucketedBatch()``.
+        branch_order: breadth-first head-branch choice (§V-H).
+        mesh: optional device mesh — plans shard the embedding mega-tables
+            row-wise over its model axis.
+        donate: donate input buffers to the compiled steps (level "dual"
+            only; the eager levels ignore it).
+    """
+
+    def __init__(self, model, params, *, level: str = "dual",
+                 policy: BatchPolicy | None = None,
+                 branch_order: str = "longer_first",
+                 mesh: jax.sharding.Mesh | None = None,
+                 donate: bool = False):
         self.model = model
         self.params = params
-        self.batch_size = batch_size
-        self.executor = DualParallelExecutor(model.build_graph, level=level,
-                                             branch_order=branch_order)
-        self._step = self.executor.build(params)
+        self.level = level
+        self.policy = policy if policy is not None else BucketedBatch()
+        self.branch_order = branch_order
+        self.mesh = mesh
+        self.donate = donate
+        self._plans: dict[PlanKey, InferencePlan] = {}
         self._queue: deque = deque()
-        self.stats = ServeStats()
+        self.stats = EngineStats()
 
-    def warmup(self) -> None:
-        ids = jnp.zeros((self.batch_size, self.model.spec.k), dtype=jnp.int32)
-        jax.block_until_ready(self._step({"ids": ids}))
+    # -- plan cache ----------------------------------------------------------
+    def _plan_key(self, bucket: int) -> PlanKey:
+        return plan_key_for(self.model, self.level, bucket,
+                            self.branch_order, sharded=self.mesh is not None)
 
+    def plan_for(self, bucket: int) -> InferencePlan:
+        """Fetch (or compile-and-cache) the plan for one batch bucket."""
+        key = self._plan_key(bucket)
+        plan = self._plans.get(key)
+        if plan is not None:
+            self.stats.cache_hits += 1
+            return plan
+        self.stats.cache_misses += 1
+        plan = compile_plan(self.model, self.params, self.level, bucket,
+                            mesh=self.mesh, donate=self.donate,
+                            branch_order=self.branch_order)
+        self._plans[key] = plan
+        self.stats.compile_ms_per_bucket[int(bucket)] = plan.compile_ms
+        return plan
+
+    @property
+    def cached_plans(self) -> tuple[PlanKey, ...]:
+        return tuple(self._plans)
+
+    def warmup(self, buckets: Sequence[int] | None = None) -> None:
+        """Compile every bucket the policy can emit (or an explicit list)."""
+        for b in (buckets if buckets is not None else self.policy.buckets):
+            self.plan_for(b)
+
+    # -- request queue -------------------------------------------------------
     def submit(self, ids_row: np.ndarray) -> None:
-        self._queue.append((time.perf_counter(), np.asarray(ids_row)))
+        """Queue one request (a per-field id vector of shape (k,))."""
+        self._queue.append((time.perf_counter(),
+                            np.asarray(ids_row, dtype=np.int32)))
+
+    def submit_many(self, rows: Sequence[np.ndarray]) -> None:
+        for r in rows:
+            self.submit(r)
 
     def pending(self) -> int:
         return len(self._queue)
 
+    # -- serving ---------------------------------------------------------------
     def serve_pending(self, allow_partial: bool = True) -> np.ndarray:
-        """Drain the queue in batches; returns all scores in submit order."""
+        """Drain the queue per the batching policy; scores in submit order.
+
+        Requests the policy declines to batch (e.g. a partial batch with
+        ``allow_partial=False``, or one still inside a timeout window) stay
+        queued untouched.
+        """
+        return self._serve(allow_partial=allow_partial, force=False)
+
+    def flush(self) -> np.ndarray:
+        """Drain everything now, overriding any timeout hold-back."""
+        return self._serve(allow_partial=True, force=True)
+
+    def _serve(self, *, allow_partial: bool, force: bool) -> np.ndarray:
         out: list[np.ndarray] = []
         while self._queue:
-            if len(self._queue) < self.batch_size and not allow_partial:
+            oldest_wait_ms = (math.inf if force else
+                              (time.perf_counter() - self._queue[0][0]) * 1e3)
+            decision = self.policy.decide(len(self._queue), oldest_wait_ms,
+                                          allow_partial=allow_partial)
+            if decision is None:
                 break
-            take = min(self.batch_size, len(self._queue))
-            items = [self._queue.popleft() for _ in range(take)]
+            items = [self._queue.popleft() for _ in range(decision.take)]
             t_submit = [it[0] for it in items]
             rows = np.stack([it[1] for it in items])
-            if take < self.batch_size:                 # pad to fixed shape
-                pad = np.zeros((self.batch_size - take, rows.shape[1]),
-                               dtype=rows.dtype)
-                rows = np.concatenate([rows, pad])
+            plan = self.plan_for(decision.bucket)
             t0 = time.perf_counter()
-            logits = self._step({"ids": jnp.asarray(rows, dtype=jnp.int32)})
-            scores = np.asarray(jax.nn.sigmoid(
-                jnp.asarray(logits).reshape(-1)))[:take]
+            # plan.predict pads to the bucket shape and slices the padding
+            # back off — one output transform shared with the one-shot path
+            scores = plan.predict(rows)
             t1 = time.perf_counter()
             out.append(scores)
-            self.stats.n_requests += take
-            self.stats.n_batches += 1
-            self.stats.compute_ms_total += (t1 - t0) * 1e3
-            self.stats.latency_ms.extend(
-                (t1 - ts) * 1e3 for ts in t_submit)
+            st = self.stats
+            st.n_requests += decision.take
+            st.n_batches += 1
+            st.batches_per_bucket[decision.bucket] = (
+                st.batches_per_bucket.get(decision.bucket, 0) + 1)
+            st.padded_rows_total += decision.bucket - decision.take
+            st.compute_ms_total += (t1 - t0) * 1e3
+            st.latency_ms.extend((t1 - ts) * 1e3 for ts in t_submit)
         return np.concatenate(out) if out else np.empty((0,))
+
+    # -- one-shot --------------------------------------------------------------
+    def predict(self, ids) -> np.ndarray:
+        """One-shot scores for ``ids`` ((k,) or (b, k)), bypassing the
+        queue. Reuses the plan cache: the smallest covering bucket, with
+        batches beyond the largest bucket chunked through it — so the
+        cache stays bounded by the policy's bucket set no matter what
+        batch sizes callers throw at it."""
+        ids = np.asarray(ids, dtype=np.int32)
+        if ids.ndim == 1:
+            ids = ids[None, :]
+        b = ids.shape[0]
+        largest = max(self.policy.buckets)
+        if b > largest:
+            return np.concatenate([self.predict(ids[i:i + largest])
+                                   for i in range(0, b, largest)])
+        bucket = min(bk for bk in self.policy.buckets if bk >= b)
+        return self.plan_for(bucket).predict(ids)
+
+
+class CTRServingEngine(InferenceEngine):
+    """Deprecated fixed-batch surface — use ``InferenceEngine`` with a
+    batching policy from ``repro.serving.batching`` instead."""
+
+    def __init__(self, model, params, *, batch_size: int = 256,
+                 level: str = "dual", branch_order: str = "longer_first"):
+        warnings.warn(
+            "CTRServingEngine is deprecated; use InferenceEngine(model, "
+            "params, policy=FixedBatch(batch_size)) — or BucketedBatch for "
+            "lower padding waste.", DeprecationWarning, stacklevel=2)
+        super().__init__(model, params, level=level,
+                         branch_order=branch_order,
+                         policy=FixedBatch(batch_size))
+        self.batch_size = batch_size

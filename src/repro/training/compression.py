@@ -15,8 +15,9 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import shard_map
 
 __all__ = ["compressed_psum_mean", "make_compressed_dp_step", "BLOCK"]
 

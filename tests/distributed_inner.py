@@ -111,7 +111,8 @@ def cell_lowering():
         C.SHAPES[shape] = C.ShapeCell(shape, 64, 8, kind)
         cell = build_cell("qwen3-4b", shape, mesh)
         compiled = cell.lower()[0].compile()
-        assert compiled.cost_analysis()["flops"] > 0
+        from repro.compat import cost_analysis
+        assert cost_analysis(compiled)["flops"] > 0
 
 
 if __name__ == "__main__":

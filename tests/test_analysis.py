@@ -7,6 +7,7 @@ import jax.numpy as jnp
 
 from repro.analysis.hlo_parse import parse_hlo
 from repro.analysis.analytic import model_flops, param_stats
+from repro.compat import cost_analysis
 
 
 def test_dot_flops_loop_corrected():
@@ -24,8 +25,22 @@ def test_dot_flops_loop_corrected():
     expect = 2 * n**3 * L
     assert abs(st.dot_flops - expect) / expect < 0.01
     # raw cost_analysis counts the body once — the analyzer must not
-    assert c.cost_analysis()["flops"] < expect / 2
+    assert cost_analysis(c)["flops"] < expect / 2
     assert st.trip_counts == [L]
+
+
+def test_dot_flops_with_tpu_tiled_layouts():
+    """Inline operand shapes may carry TPU tiling in the layout
+    (``{1,0:T(8,128)}``); the contraction dim must still be read."""
+    hlo = """\
+ENTRY %main.1 (a: f32[64,32], b: f32[32,16]) -> f32[64,16] {
+  %Arg_0.1 = f32[64,32]{1,0:T(8,128)} parameter(0)
+  %Arg_1.2 = f32[32,16]{1,0:T(8,128)} parameter(1)
+  ROOT %dot.3 = f32[64,16]{1,0:T(8,128)} dot(f32[64,32]{1,0:T(8,128)} %Arg_0.1, f32[32,16]{1,0:T(8,128)} %Arg_1.2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+    st = parse_hlo(hlo)
+    assert st.dot_flops == 2 * 64 * 16 * 32
 
 
 def test_nested_loop_multipliers():

@@ -1,0 +1,129 @@
+"""compile_plan / InferencePlan tests + the branch-order determinism fix.
+
+The Fig.-8 acceptance property (all four levels identical through the new
+API) lives here; the engine-level serving behaviour is in test_serving.py.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.compat import make_mesh
+from repro.configs import ctr_spec
+from repro.core import LEVELS, DualParallelExecutor, Op, compile_plan
+from repro.core.scheduler import breadth_first_schedule
+from repro.data.synthetic import CRITEO, synthetic_batch
+
+SCHEMA = CRITEO.scaled(2_000)
+SPEC_KW = dict(embed_dim=8, hidden=64, max_field=2_000)
+
+
+def make(model_name="dcnv2"):
+    from repro.models.ctr import CTR_MODELS
+    spec = ctr_spec(model_name, "criteo", **SPEC_KW)
+    model = CTR_MODELS[model_name](spec)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def test_all_levels_identical_through_plans():
+    model, params = make()
+    ids = synthetic_batch(SCHEMA, 0, 32)["ids"]
+    outs = {level: compile_plan(model, params, level, 32).predict(
+        np.asarray(ids)) for level in LEVELS}
+    for level, out in outs.items():
+        np.testing.assert_allclose(out, outs["naive"], rtol=1e-5, atol=1e-6,
+                                   err_msg=level)
+
+
+def test_plan_captures_schedule_and_stats():
+    model, params = make()
+    plan = compile_plan(model, params, "dual", 16)
+    assert plan.stats.schedule_policy == "breadth_first"
+    assert plan.batch_size == 16 and plan.level == "dual"
+    assert plan.graph.is_valid_order(list(plan.order))
+    assert plan.compile_ms > 0
+    assert plan.key.model == model.spec.name
+
+
+def test_plan_predict_pads_and_rejects_oversize():
+    model, params = make()
+    plan = compile_plan(model, params, "dual", 8)
+    ids = np.asarray(synthetic_batch(SCHEMA, 0, 8)["ids"])
+    full = plan.predict(ids)
+    np.testing.assert_allclose(plan.predict(ids[:3]), full[:3],
+                               rtol=1e-6, atol=1e-6)
+    one = plan.predict(ids[0])                   # (k,) row accepted
+    np.testing.assert_allclose(one, full[:1], rtol=1e-6, atol=1e-6)
+    with pytest.raises(ValueError):
+        plan.predict(np.concatenate([ids, ids]))
+
+
+def test_plan_invalid_level_and_order_rejected():
+    model, params = make()
+    with pytest.raises(ValueError):
+        compile_plan(model, params, "warp", 8)
+    with pytest.raises(ValueError):
+        compile_plan(model, params, "dual", 8, branch_order="sideways")
+
+
+def test_plan_with_mesh_matches_unsharded():
+    model, params = make()
+    ids = np.asarray(synthetic_batch(SCHEMA, 0, 16)["ids"])
+    want = compile_plan(model, params, "dual", 16).predict(ids)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    got = compile_plan(model, params, "dual", 16, mesh=mesh).predict(ids)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+    key = compile_plan(model, params, "dual", 16, mesh=mesh).key
+    assert key.sharded
+
+
+def test_model_compile_convenience():
+    model, params = make("dcn")
+    plan = model.compile(params, batch_size=8)
+    ids = np.asarray(synthetic_batch(SCHEMA, 0, 8)["ids"])
+    direct = np.asarray(model.predict_proba(params, jnp.asarray(ids)))
+    np.testing.assert_allclose(plan.predict(ids), direct,
+                               rtol=1e-5, atol=1e-5)
+
+
+# --- branch-order determinism (ISSUE-1 satellite) ----------------------------
+
+def _ops(prefix, n, module):
+    return [Op(f"{prefix}{i}", lambda x: x, ("in",), f"{prefix}o{i}",
+               module=module) for i in range(n)]
+
+
+@pytest.mark.parametrize("ne,ni", [(3, 3), (2, 4), (4, 2)])
+def test_forced_branch_order_is_deterministic(ne, ni):
+    """"explicit"/"implicit" head choices hold for ANY branch lengths —
+    including the equal-length case the old derivation silently lost."""
+    explicit, implicit = _ops("e", ne, "explicit"), _ops("i", ni, "implicit")
+    for first, head in (("explicit", "e"), ("implicit", "i")):
+        q = breadth_first_schedule(explicit, implicit, first=first).queue
+        assert q[0][0] == head, (first, q)
+
+
+def test_longer_first_ties_go_to_explicit():
+    explicit, implicit = _ops("e", 3, "explicit"), _ops("i", 3, "implicit")
+    q = breadth_first_schedule(explicit, implicit).queue
+    assert q[0][0] == "e"
+
+
+def test_executor_branch_order_equal_length_branches():
+    """End-to-end: a model whose branches tie must still honor the forced
+    orders (widedeep's wide/deep branches are short enough to tie under
+    fusion — we assert on whatever the model gives us plus a synthetic
+    tie via the scheduler API above)."""
+    model, params = make("dcnv2")
+    heads = {}
+    for order in ("explicit_first", "implicit_first"):
+        ex = DualParallelExecutor(model.build_graph, level="dual",
+                                  branch_order=order)
+        graph, _ = ex.prepare(params)
+        heads[order] = graph.op(ex.stats.queue[0]).module
+    assert heads == {"explicit_first": "explicit",
+                     "implicit_first": "implicit"}
+    with pytest.raises(ValueError):
+        DualParallelExecutor(model.build_graph, branch_order="random")

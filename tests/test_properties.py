@@ -10,9 +10,13 @@ Invariants:
 """
 
 import numpy as np
+import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis package")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (FusedEmbeddingCollection, FusedEmbeddingSpec, Op,
                         OpGraph, breadth_first_schedule, fuse_non_gemm)

@@ -1,0 +1,209 @@
+"""Serving-stack tests: batching policies, engine edge cases, plan cache.
+
+Covers the ISSUE-1 acceptance surface: empty queue, partial batch below the
+smallest bucket, ``allow_partial=False`` leaving the queue intact, submit-
+order preservation across buckets, plan-cache hit/miss accounting, and a
+mixed-size stream served through ≥2 distinct cached plans.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ctr_spec
+from repro.data.synthetic import CRITEO
+from repro.models.ctr import CTR_MODELS
+from repro.serving import (BucketedBatch, FixedBatch, InferenceEngine,
+                           TimeoutBatch)
+from repro.serving.batching import BatchDecision
+
+SCHEMA = CRITEO.scaled(2_000)
+SPEC_KW = dict(embed_dim=8, hidden=64, max_field=2_000)
+
+
+def make(model_name="widedeep"):
+    spec = ctr_spec(model_name, "criteo", **SPEC_KW)
+    model = CTR_MODELS[model_name](spec)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def rows_of(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [np.array([rng.integers(0, s) for s in SCHEMA.field_sizes],
+                     dtype=np.int32) for _ in range(n)]
+
+
+# --- batching policies (pure, no engine) ------------------------------------
+
+def test_fixed_batch_policy():
+    p = FixedBatch(32)
+    assert p.buckets == (32,)
+    assert p.decide(40, 0.0, allow_partial=False) == BatchDecision(32, 32)
+    assert p.decide(8, 0.0, allow_partial=True) == BatchDecision(8, 32)
+    assert p.decide(8, 0.0, allow_partial=False) is None
+    assert p.decide(0, 0.0, allow_partial=True) is None
+
+
+def test_bucketed_batch_prefers_largest_full_bucket():
+    p = BucketedBatch((8, 16, 32))
+    assert p.decide(100, 0.0, allow_partial=False) == BatchDecision(32, 32)
+    assert p.decide(20, 0.0, allow_partial=False) == BatchDecision(16, 16)
+    # below the smallest bucket: partial into the smallest shape only
+    assert p.decide(3, 0.0, allow_partial=True) == BatchDecision(3, 8)
+    assert p.decide(3, 0.0, allow_partial=False) is None
+
+
+def test_bucketed_ladder_is_normalized():
+    p = BucketedBatch((64, 8, 8, 32))
+    assert p.ladder == (8, 32, 64)
+    with pytest.raises(ValueError):
+        BucketedBatch(())
+
+
+def test_timeout_batch_gates_partials_on_wait():
+    p = TimeoutBatch(FixedBatch(8), max_wait_ms=10.0)
+    # full batches go immediately, even before the deadline
+    assert p.decide(9, 0.0, allow_partial=True) == BatchDecision(8, 8)
+    # partials wait out the deadline ...
+    assert p.decide(3, 5.0, allow_partial=True) is None
+    # ... then drain
+    assert p.decide(3, 11.0, allow_partial=True) == BatchDecision(3, 8)
+    # allow_partial=False still pins partials regardless of age
+    assert p.decide(3, 99.0, allow_partial=False) is None
+
+
+# --- engine edge cases -------------------------------------------------------
+
+def test_empty_queue_serves_nothing():
+    model, params = make()
+    eng = InferenceEngine(model, params, policy=BucketedBatch((8, 16)))
+    scores = eng.serve_pending()
+    assert scores.shape == (0,)
+    assert eng.stats.n_batches == 0 and eng.stats.n_requests == 0
+
+
+def test_partial_below_smallest_bucket_pads_into_it():
+    model, params = make()
+    eng = InferenceEngine(model, params, policy=BucketedBatch((8, 16)))
+    eng.submit_many(rows_of(3))
+    scores = eng.serve_pending()
+    assert scores.shape == (3,)
+    assert eng.stats.batches_per_bucket == {8: 1}
+    assert eng.stats.padded_rows_total == 5
+    assert abs(eng.stats.padding_waste - 5 / 8) < 1e-9
+
+
+def test_allow_partial_false_leaves_queue_intact():
+    model, params = make()
+    eng = InferenceEngine(model, params, policy=BucketedBatch((8, 16)))
+    eng.submit_many(rows_of(5))
+    scores = eng.serve_pending(allow_partial=False)
+    assert scores.shape == (0,)
+    assert eng.pending() == 5
+    assert eng.stats.n_batches == 0
+    # a later permissive drain serves exactly those 5, in order
+    direct = np.asarray(model.predict_proba(
+        params, jnp.asarray(np.stack(rows_of(5)))))
+    np.testing.assert_allclose(eng.serve_pending(), direct,
+                               rtol=1e-5, atol=1e-5)
+    assert eng.pending() == 0
+
+
+def test_submit_order_preserved_across_buckets():
+    model, params = make()
+    eng = InferenceEngine(model, params, policy=BucketedBatch((8, 16, 32)))
+    rows = rows_of(43)
+    eng.submit_many(rows)
+    scores = eng.serve_pending()
+    assert scores.shape == (43,)
+    # 43 = 32-full + 8-full + 3 padded into 8: three batches, two shapes
+    assert eng.stats.n_batches == 3
+    assert eng.stats.batches_per_bucket == {32: 1, 8: 2}
+    direct = np.asarray(model.predict_proba(params,
+                                            jnp.asarray(np.stack(rows))))
+    np.testing.assert_allclose(scores, direct, rtol=1e-5, atol=1e-5)
+
+
+def test_plan_cache_hits_and_misses():
+    model, params = make()
+    eng = InferenceEngine(model, params, policy=BucketedBatch((8, 16)))
+    eng.submit_many(rows_of(43))        # 16,16,8,3→8: buckets {16, 8}
+    eng.serve_pending()
+    assert eng.stats.cache_misses == 2
+    assert len(eng.cached_plans) == 2
+    assert set(eng.stats.compile_ms_per_bucket) == {8, 16}
+    hits_before = eng.stats.cache_hits
+    eng.submit_many(rows_of(43, seed=1))
+    eng.serve_pending()
+    assert eng.stats.cache_misses == 2          # nothing new compiled
+    assert eng.stats.cache_hits > hits_before
+
+
+def test_mixed_stream_through_multiple_cached_plans():
+    """Acceptance: a mixed-size stream served via ≥2 distinct plans, scores
+    matching the direct forward in submit order."""
+    model, params = make("dcn")
+    eng = InferenceEngine(model, params, policy=BucketedBatch((8, 16, 32)))
+    all_rows, out = [], []
+    for n in (12, 3, 40, 7):
+        rows = rows_of(n, seed=n)
+        all_rows += rows
+        eng.submit_many(rows)
+        out.append(eng.serve_pending())
+    scores = np.concatenate(out)
+    assert len(eng.cached_plans) >= 2
+    direct = np.asarray(model.predict_proba(
+        params, jnp.asarray(np.stack(all_rows))))
+    np.testing.assert_allclose(scores, direct, rtol=1e-5, atol=1e-5)
+
+
+def test_timeout_engine_holds_then_flushes():
+    model, params = make()
+    eng = InferenceEngine(
+        model, params,
+        policy=TimeoutBatch(FixedBatch(8), max_wait_ms=60_000.0))
+    eng.submit_many(rows_of(3))
+    assert eng.serve_pending().shape == (0,)    # inside the SLO window
+    assert eng.pending() == 3
+    scores = eng.flush()                        # force-drain overrides it
+    assert scores.shape == (3,) and eng.pending() == 0
+
+
+def test_one_shot_predict_reuses_cache():
+    model, params = make()
+    eng = InferenceEngine(model, params, policy=BucketedBatch((8, 16)))
+    ids = np.stack(rows_of(5))
+    scores = eng.predict(ids)
+    assert scores.shape == (5,)
+    assert eng.stats.cache_misses == 1          # covering bucket 8
+    eng.predict(ids[0])                         # single row, same bucket
+    assert eng.stats.cache_misses == 1
+
+
+def test_one_shot_predict_chunks_oversize_batches():
+    """Batches beyond the largest bucket chunk through it — the plan cache
+    stays bounded by the policy's bucket set."""
+    model, params = make()
+    eng = InferenceEngine(model, params, policy=BucketedBatch((8, 16)))
+    rows = rows_of(37)                           # 16 + 16 + 5→8
+    scores = eng.predict(np.stack(rows))
+    assert scores.shape == (37,)
+    assert set(eng.stats.compile_ms_per_bucket) <= {8, 16}
+    direct = np.asarray(model.predict_proba(
+        params, jnp.asarray(np.stack(rows))))
+    np.testing.assert_allclose(scores, direct, rtol=1e-5, atol=1e-5)
+
+
+def test_deprecated_engine_still_serves():
+    from repro.serving import CTRServingEngine
+    model, params = make()
+    with pytest.warns(DeprecationWarning):
+        eng = CTRServingEngine(model, params, batch_size=32, level="dual")
+    eng.warmup()
+    rows = rows_of(50)
+    eng.submit_many(rows)
+    scores = eng.serve_pending()
+    assert scores.shape == (50,)
+    assert eng.stats.n_batches == 2             # 32 full + 18 padded

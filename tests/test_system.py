@@ -88,7 +88,7 @@ def test_training_learns_and_metrics_improve():
         return state, {"loss": loss, **m}
 
     losses = []
-    for s in range(60):
+    for s in range(120):
         state, m = step_fn(state, synthetic_batch(SCHEMA, s, 256))
         losses.append(float(m["loss"]))
     assert np.mean(losses[-10:]) < np.mean(losses[:10])
