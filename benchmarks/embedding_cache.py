@@ -1,0 +1,101 @@
+"""Embedding-store cache sweep: capacity × traffic skew.
+
+The DenseStore/CachedStore question in numbers (HugeCTR inference
+parameter server, arXiv:2210.08804): at a fixed hot-row budget C, how much
+of the traffic does the cache absorb as the zipf exponent grows, and what
+does the two-level gather cost relative to the monolithic mega-table?
+
+Per (capacity, skew) cell:
+  1. warm the store's admission counters with observed skewed traffic,
+  2. ``refresh`` (admit the top-C rows),
+  3. measure the *post-refresh* hit rate on fresh traffic from the same
+     distribution, the cached-traffic fraction, and the fused one-hot
+     lookup time through both stores.
+
+CSV: ``emb_cache/C{cap}/{skew}/{dense|cached}``; the cached line's
+``derived`` column carries ``hit_rate=…,cached_traffic=…``. Both counters
+must increase with skew at fixed capacity — uniform traffic pins the hit
+rate near C/rows, zipf concentrates it toward 1.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.embedding import (CachedStore, FusedEmbeddingCollection,
+                             FusedEmbeddingSpec)
+from repro.data.synthetic import zipf_ids
+
+from .common import emit, time_fn
+
+
+def _traffic(key, n_batches: int, batch: int, field_sizes, exponent: float):
+    return [np.asarray(zipf_ids(jax.random.fold_in(key, t), batch,
+                                field_sizes, exponent=exponent))
+            for t in range(n_batches)]
+
+
+def _cell(spec: FusedEmbeddingSpec, capacity: int, exponent: float,
+          batch: int, warm_batches: int, tag: str) -> dict:
+    key = jax.random.PRNGKey(0)
+    dense = FusedEmbeddingCollection(spec)
+    params_d = dense.init(key)
+    store = CachedStore(spec, capacity=capacity)
+    cached = FusedEmbeddingCollection(spec, store=store)
+    params_c = store.from_dense(params_d)        # same table, tiered layout
+
+    # 1-2. observe warmup traffic, admit the top-C rows
+    for ids in _traffic(key, warm_batches, batch, spec.field_sizes, exponent):
+        cached.observe(ids)
+    params_c = store.refresh(params_c)
+
+    # 3. post-refresh hit rate on fresh traffic (same distribution)
+    hits0, lookups0 = store.stats.hits, store.stats.lookups
+    fresh = _traffic(jax.random.fold_in(key, 10_000), warm_batches, batch,
+                     spec.field_sizes, exponent)
+    for ids in fresh:
+        cached.observe(ids)
+    dlook = store.stats.lookups - lookups0
+    hit_rate = (store.stats.hits - hits0) / dlook if dlook else 0.0
+
+    ids = jnp.asarray(fresh[0], dtype=jnp.int32)
+    # params passed as arguments (a closure would bake the tables into the
+    # executable as multi-GB constants)
+    f_dense = jax.jit(lambda p, i: dense.apply(p, i))
+    f_cached = jax.jit(lambda p, i: cached.apply(p, i))
+    td = time_fn(f_dense, params_d, ids, reps=3, warmup=1)
+    tc = time_fn(f_cached, params_c, ids, reps=3, warmup=1)
+    ctf = store.cached_traffic_fraction
+    emit(f"emb_cache/{tag}/dense", td)
+    emit(f"emb_cache/{tag}/cached", tc,
+         f"hit_rate={hit_rate:.3f},cached_traffic={ctf:.3f},"
+         f"refreshes={store.stats.refreshes}")
+    return {"hit_rate": hit_rate, "cached_traffic": ctf,
+            "dense_us": td, "cached_us": tc}
+
+
+def run(quick: bool = False, dry: bool = False) -> dict:
+    if dry:
+        k, n, d, batch, warm = 4, 2_000, 8, 256, 2
+        capacities, exponents = [64], [0.0, 1.3]
+    elif quick:
+        k, n, d, batch, warm = 8, 20_000, 16, 1024, 4
+        capacities, exponents = [1_024], [0.0, 1.05, 1.3]
+    else:
+        k, n, d, batch, warm = 26, 100_000, 32, 4096, 8
+        capacities = [4_096, 32_768, 262_144]
+        exponents = [0.0, 1.05, 1.2, 1.4, 1.6]
+    spec = FusedEmbeddingSpec(field_sizes=(n,) * k, dim=d)
+    out = {}
+    for cap in capacities:
+        for e in exponents:
+            skew = "uniform" if e == 0.0 else f"zipf{e}"
+            out[f"C{cap}_{skew}"] = _cell(spec, cap, e, batch, warm,
+                                          f"C{cap}/{skew}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

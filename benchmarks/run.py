@@ -1,12 +1,16 @@
 """Benchmark driver — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV lines (scaffold contract).
-``--quick`` shrinks sweeps for CI; default exercises the paper grids.
+``--quick`` shrinks sweeps for CI; ``--dry`` shrinks further to a smoke
+configuration (every driver must *run*, numbers are throwaway — the CI
+bench-smoke job uses it so drivers can't silently rot); default exercises
+the paper grids.
 """
 
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
 import traceback
@@ -15,11 +19,13 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--dry", action="store_true",
+                    help="tiny smoke config (implies --quick)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of benchmark names")
     args = ap.parse_args()
 
-    from . import (accuracy_parity, breakdown, e2e_speedup,
+    from . import (accuracy_parity, breakdown, e2e_speedup, embedding_cache,
                    embedding_sensitivity, roofline_report, scheduling,
                    serving_batching, workload_allocation)
     suites = {
@@ -27,6 +33,7 @@ def main() -> None:
         "e2e_speedup": e2e_speedup,               # Fig. 7 / Table II
         "breakdown": breakdown,                   # Fig. 8
         "embedding_sensitivity": embedding_sensitivity,  # Fig. 10
+        "embedding_cache": embedding_cache,       # store tiering sweep
         "workload_allocation": workload_allocation,      # Fig. 11
         "scheduling": scheduling,                 # Fig. 12/13
         "serving_batching": serving_batching,     # Fig. 7 serving policies
@@ -39,8 +46,11 @@ def main() -> None:
             continue
         print(f"# === {name} ===", flush=True)
         t0 = time.time()
+        kwargs = {"quick": args.quick or args.dry}
+        if args.dry and "dry" in inspect.signature(mod.run).parameters:
+            kwargs["dry"] = True
         try:
-            mod.run(quick=args.quick)
+            mod.run(**kwargs)
         except Exception:
             traceback.print_exc()
             failed.append(name)

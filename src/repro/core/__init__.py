@@ -1,6 +1,7 @@
 """repro.core — DPIFrame's contribution as composable JAX modules.
 
-  fused_embedding.py  C2: mega-table fused multi-table lookup (+ sharded)
+  fused_embedding.py  C2 shim: re-exports the ``repro.embedding`` subsystem
+                      (mega-table spec, Dense/Cached stores, collection)
   opgraph.py          C5: operator DAG + non-GEMM fusion pass
   scheduler.py        C4: breadth-first stream scheduling (Alg. 2)
   dual_parallel.py    C1: the dual-parallel executor (Fig.-8 levels)
@@ -11,8 +12,9 @@
 from .dual_parallel import (BRANCH_ORDERS, LEVELS, DualParallelExecutor,
                             ExecutorStats)
 from .plan import InferencePlan, PlanKey, compile_plan
-from .fused_embedding import (FusedEmbeddingCollection, FusedEmbeddingSpec,
-                              sharded_vocab_lookup)
+from .fused_embedding import (CachedStore, DenseStore, EmbeddingStore,
+                              FusedEmbeddingCollection, FusedEmbeddingSpec,
+                              StoreStats, sharded_vocab_lookup)
 from .opgraph import Op, FusedOp, OpGraph, fuse_non_gemm, register_fused_kernel
 from .scheduler import (breadth_first_schedule, depth_first_schedule,
                         full_order)
@@ -27,6 +29,10 @@ __all__ = [
     "compile_plan",
     "FusedEmbeddingCollection",
     "FusedEmbeddingSpec",
+    "EmbeddingStore",
+    "DenseStore",
+    "CachedStore",
+    "StoreStats",
     "sharded_vocab_lookup",
     "Op",
     "FusedOp",

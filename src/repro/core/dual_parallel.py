@@ -49,6 +49,10 @@ class ExecutorStats:
     kernels_used: tuple[str, ...]
     schedule_policy: str
     queue: tuple[str, ...]
+    # identity of the embedding tier the plan was compiled against
+    # ("dense(rows=...,d=...)" / "cached(C=...,rows=...,d=...)"), stamped by
+    # compile_plan; live hit-rate counters are on EngineStats, not here
+    embedding_store: str = "none"
 
 
 class DualParallelExecutor:

@@ -1,179 +1,16 @@
-"""FusedEmbeddingCollection — the mega-table realization of paper Alg. 1.
+"""Compatibility shim — the embedding path now lives in ``repro.embedding``.
 
-All k per-field embedding tables are concatenated row-wise into ONE
-``mega_table`` parameter; per-field ids become global rows via static
-offsets. One gather (Pallas on TPU / single XLA gather on CPU) replaces k
-serial lookups — contribution C2, with C3's output-first allocation inside
-the kernel.
-
-Distribution: the mega-table is *row-sharded* over the ``model`` mesh axis
-(vocab-parallel). ``apply_sharded`` performs the masked-local-gather + psum
-pattern under ``shard_map`` — the multi-chip generalization of Alg. 1; the
-same helper serves LM vocab embeddings (a 1-table degenerate case).
+The mega-table spec, the store tier (``DenseStore``/``CachedStore``), and
+``FusedEmbeddingCollection`` moved into the :mod:`repro.embedding`
+subsystem when the cache-aware parameter-server refactor landed. This
+module keeps the historical import path
+(``repro.core.fused_embedding`` / ``repro.core``) working.
 """
 
-from __future__ import annotations
-
-import dataclasses
-import functools
-from typing import Sequence
-
-import numpy as np
-import jax
-import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
-
-from repro.compat import shard_map
-
-from repro.kernels import ops as kops
+from repro.embedding import (CachedStore, DenseStore, EmbeddingStore,
+                             FusedEmbeddingCollection, FusedEmbeddingSpec,
+                             StoreStats, sharded_vocab_lookup)
 
 __all__ = ["FusedEmbeddingSpec", "FusedEmbeddingCollection",
+           "EmbeddingStore", "DenseStore", "CachedStore", "StoreStats",
            "sharded_vocab_lookup"]
-
-
-@dataclasses.dataclass(frozen=True)
-class FusedEmbeddingSpec:
-    """Static description of a CTR embedding module.
-
-    Attributes:
-        field_sizes: number of features n_i per field (len = k).
-        dim:         shared embedding dimension d.
-        multi_hot:   max ids per field (1 = one-hot fields).
-        dtype:       parameter dtype.
-        pad_rows_to: pad the mega-table height to a multiple (sharding).
-    """
-    field_sizes: tuple[int, ...]
-    dim: int
-    multi_hot: int = 1
-    dtype: str = "float32"
-    pad_rows_to: int = 1
-
-    @property
-    def k(self) -> int:
-        return len(self.field_sizes)
-
-    @property
-    def rows(self) -> int:
-        """Mega-table height: all fields + 1 zero row (multi-hot masking),
-        padded up for even sharding."""
-        n = int(sum(self.field_sizes)) + 1
-        pad = self.pad_rows_to
-        return ((n + pad - 1) // pad) * pad
-
-    @property
-    def offsets(self) -> np.ndarray:
-        return np.concatenate(
-            [[0], np.cumsum(self.field_sizes)[:-1]]).astype(np.int32)
-
-    @property
-    def zero_row(self) -> int:
-        return int(sum(self.field_sizes))
-
-    @property
-    def n_params(self) -> int:
-        return self.rows * self.dim
-
-
-class FusedEmbeddingCollection:
-    """Parameter container + lookup front-end for the fused mega-table."""
-
-    def __init__(self, spec: FusedEmbeddingSpec):
-        self.spec = spec
-        self._offsets = jnp.asarray(spec.offsets)
-
-    # -- params ------------------------------------------------------------
-    def init(self, key: jax.Array) -> dict:
-        spec = self.spec
-        scale = 1.0 / np.sqrt(spec.dim)
-        table = jax.random.normal(
-            key, (spec.rows, spec.dim), dtype=jnp.dtype(spec.dtype)) * scale
-        # zero row (and padding rows) must stay zero for multi-hot masking
-        table = table.at[spec.zero_row:].set(0.0)
-        return {"mega_table": table}
-
-    def partition_spec(self, model_axis: str | None = "model") -> dict:
-        """Row-sharded (vocab-parallel) placement of the mega-table."""
-        return {"mega_table": P(model_axis, None)}
-
-    # -- single-device / replicated lookup ----------------------------------
-    def apply(self, params: dict, ids: jax.Array, *,
-              strategy: str = "auto", interpret: bool | None = None
-              ) -> jax.Array:
-        """ids (b, k) -> (b, k*d)."""
-        return kops.multi_table_lookup(
-            ids, params["mega_table"], self._offsets,
-            strategy=strategy, interpret=interpret)
-
-    def apply_multihot(self, params: dict, ids: jax.Array, mask: jax.Array,
-                       *, strategy: str = "auto",
-                       interpret: bool | None = None) -> jax.Array:
-        """ids/mask (b, k, h) -> (b, k*d) sum-pooled."""
-        return kops.multi_table_lookup_multihot(
-            ids, mask, params["mega_table"], self._offsets,
-            strategy=strategy, interpret=interpret)
-
-    def apply_serial(self, params: dict, ids: jax.Array) -> jax.Array:
-        """Baseline: k separate gathers + concat (PyTorch-A analogue)."""
-        return kops.multi_table_lookup(
-            ids, params["mega_table"], self._offsets, strategy="serial")
-
-    # -- distributed lookup --------------------------------------------------
-    def apply_sharded(self, params: dict, ids: jax.Array, mesh: jax.sharding.Mesh,
-                      *, model_axis: str = "model",
-                      batch_axes: tuple[str, ...] = ("data",)) -> jax.Array:
-        """Vocab-parallel fused lookup over a row-sharded mega-table.
-
-        Each shard gathers locally (out-of-range rows masked to 0) and the
-        partial results are summed over the model axis — one psum replaces
-        k independent lookups' worth of gather traffic.
-        """
-        b, k = ids.shape
-        d = self.spec.dim
-        global_rows = (ids.astype(jnp.int32) + self._offsets[None, :])
-
-        def _local(rows, table):
-            axis_idx = jax.lax.axis_index(model_axis)
-            shard_rows = table.shape[0]
-            lo = axis_idx * shard_rows
-            local = rows - lo
-            valid = (local >= 0) & (local < shard_rows)
-            safe = jnp.where(valid, local, 0)
-            vals = jnp.take(table, safe.reshape(-1), axis=0)
-            vals = vals.reshape(*rows.shape, d)
-            vals = jnp.where(valid[..., None], vals, 0)
-            return jax.lax.psum(vals, axis_name=model_axis)
-
-        baxis = batch_axes if len(batch_axes) > 1 else batch_axes[0]
-        fn = shard_map(
-            _local, mesh=mesh,
-            in_specs=(P(baxis, None), P(model_axis, None)),
-            out_specs=P(baxis, None, None),
-            check_vma=False)
-        out = fn(global_rows, params["mega_table"])
-        return out.reshape(b, k * d)
-
-
-def sharded_vocab_lookup(table: jax.Array, ids: jax.Array, *,
-                         model_axis: str = "model") -> jax.Array:
-    """shard_map-interior vocab-parallel lookup (LM embedding reuse).
-
-    Call *inside* an existing shard_map / with sharded ``table`` rows:
-    masked local gather + psum over ``model_axis``.
-
-    Args:
-        table: (rows_per_shard, d) local shard of the embedding table.
-        ids:   (...,) global token ids.
-
-    Returns:
-        (..., d) embeddings, replicated over the model axis.
-    """
-    shard_rows = table.shape[0]
-    axis_idx = jax.lax.axis_index(model_axis)
-    lo = axis_idx * shard_rows
-    local = ids.astype(jnp.int32) - lo
-    valid = (local >= 0) & (local < shard_rows)
-    safe = jnp.where(valid, local, 0)
-    vals = jnp.take(table, safe.reshape(-1), axis=0)
-    vals = vals.reshape(*ids.shape, table.shape[1])
-    vals = jnp.where(valid[..., None], vals, 0)
-    return jax.lax.psum(vals, axis_name=model_axis)

@@ -52,6 +52,15 @@ class PlanKey:
     batch_size: int
     branch_order: str = "longer_first"
     sharded: bool = False
+    store: str = "dense"
+
+
+def _store_describe(model) -> str:
+    """Embedding-store identity of a model (plan keys and stats carry it:
+    two models differing only in store tiers must never share plans)."""
+    coll = getattr(model, "embedding", None)
+    store = getattr(coll, "store", None)
+    return store.describe() if store is not None else "none"
 
 
 def plan_key_for(model, level: str, batch_size: int,
@@ -62,7 +71,8 @@ def plan_key_for(model, level: str, batch_size: int,
     caches, so the two can never drift."""
     return PlanKey(model=getattr(model.spec, "name", type(model).__name__),
                    level=level, batch_size=int(batch_size),
-                   branch_order=branch_order, sharded=sharded)
+                   branch_order=branch_order, sharded=sharded,
+                   store=_store_describe(model))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,23 +124,31 @@ class InferencePlan:
             jax.nn.sigmoid(jnp.reshape(jnp.asarray(logits), (-1,))))[:b]
 
 
-def _shard_params(params: Any, mesh: jax.sharding.Mesh,
-                  model_axis: str) -> Any:
-    """Place params on ``mesh``: embedding mega-tables row-sharded over the
-    model axis (when their height divides), everything else replicated."""
+def _shard_params(params: Any, mesh: jax.sharding.Mesh, model_axis: str,
+                  specs: Any = None) -> Any:
+    """Place params on ``mesh`` per a PartitionSpec tree.
+
+    ``specs`` comes from the model's ``partition_spec(params)`` — which
+    delegates embedding subtrees to their store — so placement follows the
+    parameter *structure*, not fragile name matching (the old
+    ``"mega" in names`` heuristic broke as soon as a store renamed or
+    nested its leaves). Leaves whose leading dim doesn't divide the axis
+    fall back to replication; ``specs=None`` replicates everything.
+    """
     from jax.sharding import NamedSharding, PartitionSpec as P
     n_shards = dict(zip(mesh.axis_names, mesh.devices.shape))[model_axis]
+    if specs is None:
+        specs = jax.tree.map(lambda _: P(), params)
 
-    def place(path, leaf):
-        names = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                         for p in path)
-        spec = P()
-        if ("mega" in names and getattr(leaf, "ndim", 0) == 2
-                and leaf.shape[0] % n_shards == 0):
-            spec = P(model_axis, None)
+    def place(leaf, spec):
+        dims = tuple(spec)
+        if (dims and dims[0] == model_axis
+                and (getattr(leaf, "ndim", 0) == 0
+                     or leaf.shape[0] % n_shards != 0)):
+            spec = P()
         return jax.device_put(leaf, NamedSharding(mesh, spec))
 
-    return jax.tree_util.tree_map_with_path(place, params)
+    return jax.tree.map(place, params, specs)
 
 
 def compile_plan(model, params: Any, level: str = "dual",
@@ -161,7 +179,9 @@ def compile_plan(model, params: Any, level: str = "dual",
         raise ValueError(f"branch_order must be one of {BRANCH_ORDERS}, "
                          f"got {branch_order!r}")
     if mesh is not None:
-        params = _shard_params(params, mesh, model_axis)
+        specs = (model.partition_spec(params, model_axis)
+                 if hasattr(model, "partition_spec") else None)
+        params = _shard_params(params, mesh, model_axis, specs)
 
     executor = DualParallelExecutor(model.build_graph, level=level,
                                     branch_order=branch_order)
@@ -189,6 +209,8 @@ def compile_plan(model, params: Any, level: str = "dual",
 
     key = plan_key_for(model, level, batch_size, branch_order,
                        sharded=mesh is not None)
-    return InferencePlan(key=key, stats=executor.stats, graph=graph,
+    stats = executor.stats
+    stats.embedding_store = _store_describe(model)
+    return InferencePlan(key=key, stats=stats, graph=graph,
                          order=tuple(order), step=step, n_fields=n_fields,
                          donate=donate, compile_ms=compile_ms)

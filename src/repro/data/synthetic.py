@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["DatasetSchema", "AVAZU", "CRITEO", "synthetic_batch",
-           "make_schema"]
+           "make_schema", "zipf_ids"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,6 +72,40 @@ def make_schema(name: str, k: int, n_per_field: int, seed: int = 0
     return DatasetSchema(name=name, field_sizes=(n_per_field,) * k, seed=seed)
 
 
+def zipf_ids(key: jax.Array, batch: int, field_sizes: tuple[int, ...],
+             exponent: float = 1.1) -> jax.Array:
+    """Zipf-skewed per-field ids: P(id = r) ∝ (r+1)^-exponent, id < n_i.
+
+    Real CTR id traffic is zipfian (the premise of HugeCTR-style hot-row
+    caching); the old generator only had the mild "square the uniform"
+    skew. Sampling is inverse-CDF on the continuous bounded power law —
+    exact for exponent=1 (``x = n^u``), the standard continuous surrogate
+    otherwise — so it is O(batch·k), vectorized, and deterministic in
+    ``key`` (no per-field cdf tables over multi-million vocabularies).
+
+    Args:
+        key: PRNG key.
+        batch: number of samples b.
+        field_sizes: per-field vocabulary sizes (k,).
+        exponent: zipf s; larger = heavier head (1.0–2.0 typical). 0 is
+            valid and gives uniform traffic.
+
+    Returns:
+        (b, k) int32 ids, field i in [0, field_sizes[i]).
+    """
+    sizes = jnp.asarray(field_sizes, dtype=jnp.float32)[None, :]
+    u = jax.random.uniform(key, (batch, len(field_sizes)))
+    s = float(exponent)
+    if abs(s - 1.0) < 1e-9:
+        x = jnp.power(sizes, u)                      # cdf ∝ log x
+    else:
+        # inverse of F(x) = (x^(1-s) - 1) / (n^(1-s) - 1) on [1, n]
+        x = jnp.power(1.0 + u * (jnp.power(sizes, 1.0 - s) - 1.0),
+                      1.0 / (1.0 - s))
+    ids = jnp.floor(x).astype(jnp.int32) - 1
+    return jnp.clip(ids, 0, jnp.asarray(field_sizes, jnp.int32)[None, :] - 1)
+
+
 def _planted_effect(ids: jax.Array, field_sizes: jax.Array) -> jax.Array:
     """Hidden per-(field, id) logit effects — cheap hash-based surrogate.
 
@@ -86,15 +120,33 @@ def _planted_effect(ids: jax.Array, field_sizes: jax.Array) -> jax.Array:
 
 
 def synthetic_batch(schema: DatasetSchema, step: int, batch: int,
-                    *, seed: int | None = None) -> dict[str, jax.Array]:
-    """Pure function (schema, step) -> {ids (b,k) int32, labels (b,) f32}."""
+                    *, seed: int | None = None, skew: str = "quadratic",
+                    zipf_exponent: float = 1.1) -> dict[str, jax.Array]:
+    """Pure function (schema, step) -> {ids (b,k) int32, labels (b,) f32}.
+
+    ``skew`` selects the id popularity profile:
+      "quadratic"  square the uniform — the original mild low-id skew
+                   (default; byte-identical to the pre-zipf generator).
+      "uniform"    no skew (worst case for any hot-row cache).
+      "zipf"       bounded zipf with ``zipf_exponent`` (cache-benchmark
+                   traffic; heavier exponent = hotter head).
+    """
     seed = schema.seed if seed is None else seed
     key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
     k_ids, k_lab = jax.random.split(key)
     sizes = jnp.asarray(schema.field_sizes, dtype=jnp.int32)
-    u = jax.random.uniform(k_ids, (batch, schema.k))
-    # mild popularity skew: square the uniform to favour low ids
-    ids = jnp.minimum((u * u * sizes[None, :]).astype(jnp.int32), sizes - 1)
+    if skew == "quadratic":
+        u = jax.random.uniform(k_ids, (batch, schema.k))
+        ids = jnp.minimum((u * u * sizes[None, :]).astype(jnp.int32),
+                          sizes - 1)
+    elif skew == "uniform":
+        u = jax.random.uniform(k_ids, (batch, schema.k))
+        ids = jnp.minimum((u * sizes[None, :]).astype(jnp.int32), sizes - 1)
+    elif skew == "zipf":
+        ids = zipf_ids(k_ids, batch, schema.field_sizes,
+                       exponent=zipf_exponent)
+    else:
+        raise ValueError(f"unknown skew {skew!r}")
     logits = _planted_effect(ids, sizes)
     labels = (jax.random.uniform(k_lab, (batch,)) <
               jax.nn.sigmoid(logits)).astype(jnp.float32)

@@ -202,12 +202,22 @@ def param_specs(family: str, shapes: Any, cfg: Any = None) -> Any:
 
 
 def ctr_param_specs(shapes: Any) -> Any:
-    """CTR models: mega-tables row-sharded over model, dense replicated
-    (they are latency-bound, DESIGN §5)."""
+    """CTR models: embedding tables row-sharded over model, dense replicated
+    (they are latency-bound, DESIGN §5).
+
+    Training-side twin of the serving path's store-delegated placement
+    (``CTRModel.partition_spec``): the store leaf names are the contract —
+    ``mega_table`` (DenseStore) and ``backing`` (CachedStore) are the
+    vocab-parallel tables; a CachedStore's ``cache``/``slot_of_row`` tiers
+    stay replicated (small and latency-critical).
+    """
     def leaf_spec(path, leaf):
         ps = _path_str(path)
-        if ps.endswith("mega") and leaf.ndim == 2:
+        if ((ps.endswith("mega_table") or ps.endswith("backing"))
+                and leaf.ndim == 2):
             return P("model", None)
+        if ps.endswith("cache") or ps.endswith("slot_of_row"):
+            return P()
         if leaf.ndim == 2 and leaf.shape[0] * leaf.shape[1] >= 1 << 16:
             return P(None, "model")
         return P()

@@ -1,0 +1,27 @@
+"""repro.embedding — the tiered embedding parameter-server subsystem.
+
+  spec.py        FusedEmbeddingSpec (static schema of a fused mega-table)
+  store.py       EmbeddingStore abstraction + DenseStore (monolithic tier)
+  cached.py      CachedStore (hot-row cache + backing table, HugeCTR-style)
+  collection.py  FusedEmbeddingCollection — the lookup front-end models
+                 emit graph ops against; delegates everything to its store
+
+The rest of the stack is store-agnostic: models hold a collection, plans
+place parameters via ``partition_spec()``, engines feed traffic back via
+``observe``/``refresh`` (see ``repro.serving.engine``).
+"""
+
+from .spec import FusedEmbeddingSpec
+from .store import DenseStore, EmbeddingStore, StoreStats
+from .cached import CachedStore
+from .collection import FusedEmbeddingCollection, sharded_vocab_lookup
+
+__all__ = [
+    "FusedEmbeddingSpec",
+    "EmbeddingStore",
+    "DenseStore",
+    "CachedStore",
+    "StoreStats",
+    "FusedEmbeddingCollection",
+    "sharded_vocab_lookup",
+]

@@ -1,0 +1,157 @@
+"""CachedStore — HugeCTR-style hot-row cache over a backing mega-table.
+
+Two tiers, one index map:
+
+  ``backing``     (rows, d)  the full mega-table (conceptually host/HBM).
+  ``cache``       (C, d)     device-resident copies of the C hottest rows.
+  ``slot_of_row`` (rows,)    int32 index map: cache slot of each global
+                             row, -1 when the row is not cached.
+
+A lookup is one *two-level gather*: cached rows are gathered from the
+cache, misses fall through to the backing store — on TPU via the
+scalar-prefetch Pallas kernel ``mtl_gather_two_level`` (the miss
+fall-through happens in the BlockSpec index map, so hits never touch
+backing rows beyond row 0), on CPU via the identical-math jnp path.
+
+Bit-exactness by construction: cache rows are verbatim copies of backing
+rows, so ``CachedStore`` and ``DenseStore`` built from the same key are
+value-identical on every input — which cache state is live only changes
+*where* a row is read from, never what is read (paper Table I discipline).
+
+Admission/refresh follows the zipf skew of observed traffic: the store
+counts served row frequencies host-side (``observe``), and ``refresh``
+rebuilds the cache with the C most frequent rows (deterministic tie-break
+by row id). Until the first refresh the cache seeds with the lowest C row
+ids — the right prior for CTR id streams, where popular items cluster at
+small ids (both the synthetic quadratic skew and zipf traffic do).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels import ops as kops
+
+from .spec import FusedEmbeddingSpec
+from .store import EmbeddingStore
+
+__all__ = ["CachedStore"]
+
+
+class CachedStore(EmbeddingStore):
+    """Hot-row cache of capacity ``C`` rows over the full backing table.
+
+    The store keeps a host-side mirror of the index map plus per-row
+    traffic counts; ``refresh`` is the only operation that changes cache
+    contents, and it returns a *new* param subtree (callers holding
+    compiled plans must recompile — ``InferenceEngine.refresh_cache``
+    does both and counts it).
+    """
+
+    refreshable = True
+
+    def __init__(self, spec: FusedEmbeddingSpec, capacity: int):
+        super().__init__(spec)
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = int(min(capacity, spec.rows))
+        self._counts = np.zeros(spec.rows, dtype=np.int64)
+        self._slot_of_row = self._seed_map()
+
+    def _seed_map(self) -> np.ndarray:
+        m = np.full(self.spec.rows, -1, dtype=np.int32)
+        m[:self.capacity] = np.arange(self.capacity, dtype=np.int32)
+        return m
+
+    # -- params ------------------------------------------------------------
+    def init(self, key: jax.Array) -> dict:
+        return self.from_dense({"mega_table": self.init_dense_table(key)})
+
+    def from_dense(self, dense_params: dict) -> dict:
+        """Adopt a DenseStore subtree (``{"mega_table": table}``) into the
+        tiered layout, caching per the store's current index map."""
+        backing = dense_params["mega_table"]
+        return self._with_cache(backing, self._slot_of_row)
+
+    def adopt(self, params: dict) -> dict:
+        if "backing" in params:
+            return self._with_cache(params["backing"], self._slot_of_row)
+        return self.from_dense(params)
+
+    def _with_cache(self, backing: jax.Array,
+                    slot_of_row: np.ndarray) -> dict:
+        hot = np.flatnonzero(slot_of_row >= 0)
+        cached_rows = hot[np.argsort(slot_of_row[hot])]   # row of slot s
+        if cached_rows.size != self.capacity:
+            raise ValueError(f"index map holds {cached_rows.size} slots, "
+                             f"capacity is {self.capacity}")
+        return {"backing": backing,
+                "cache": jnp.take(backing, jnp.asarray(cached_rows), axis=0),
+                "slot_of_row": jnp.asarray(slot_of_row)}
+
+    def partition_spec(self, model_axis: str | None = "model") -> dict:
+        """Backing row-sharded (vocab-parallel); the hot cache and the
+        index map are small and latency-critical — replicated."""
+        return {"backing": P(model_axis, None),
+                "cache": P(),
+                "slot_of_row": P()}
+
+    def dense_view(self, params: dict) -> jax.Array:
+        return params["backing"]
+
+    # -- lookup ------------------------------------------------------------
+    def lookup(self, params: dict, ids: jax.Array, offsets: jax.Array, *,
+               strategy: str = "auto",
+               interpret: bool | None = None) -> jax.Array:
+        return kops.multi_table_lookup_cached(
+            ids, params["cache"], params["backing"], params["slot_of_row"],
+            offsets, strategy=strategy, interpret=interpret)
+
+    def lookup_multihot(self, params: dict, ids: jax.Array, mask: jax.Array,
+                        offsets: jax.Array, *, strategy: str = "auto",
+                        interpret: bool | None = None) -> jax.Array:
+        return kops.multi_table_lookup_cached_multihot(
+            ids, mask, params["cache"], params["backing"],
+            params["slot_of_row"], offsets,
+            strategy=strategy, interpret=interpret)
+
+    # -- traffic / cache management ---------------------------------------
+    def observe(self, global_rows: np.ndarray) -> None:
+        # clip like the gather does (jnp.take clamps), so one malformed id
+        # can't wedge the serving loop; O(b·k) — no full-vocab allocation
+        # per batch (np.bincount(minlength=rows) would be O(vocab))
+        rows = np.clip(np.asarray(global_rows).reshape(-1),
+                       0, self._counts.size - 1)
+        np.add.at(self._counts, rows, 1)
+        hits = int((self._slot_of_row[rows] >= 0).sum())
+        self.stats.hits += hits
+        self.stats.misses += rows.size - hits
+
+    def refresh(self, params: dict) -> dict:
+        """Re-admit the C most frequent observed rows (ties -> lower row id
+        wins, so refresh is deterministic for any traffic history)."""
+        order = np.lexsort((np.arange(self._counts.size), -self._counts))
+        hot = np.sort(order[:self.capacity]).astype(np.int32)
+        new_map = np.full(self._counts.size, -1, dtype=np.int32)
+        new_map[hot] = np.arange(self.capacity, dtype=np.int32)
+        self._slot_of_row = new_map
+        self.stats.refreshes += 1
+        return self._with_cache(params["backing"], new_map)
+
+    @property
+    def cached_traffic_fraction(self) -> float:
+        """Share of observed traffic mass landing on currently-cached rows
+        — the counter that grows with skew at fixed capacity (zipf mass
+        concentrates in the top-C). O(rows): read it lazily (refresh time,
+        stats dumps), not per served batch — engines do."""
+        total = int(self._counts.sum())
+        if not total:
+            return 0.0
+        return float(self._counts[self._slot_of_row >= 0].sum()) / total
+
+    def describe(self) -> str:
+        return (f"cached(C={self.capacity},rows={self.spec.rows},"
+                f"d={self.spec.dim})")

@@ -1,0 +1,57 @@
+"""FusedEmbeddingSpec — static description of a CTR embedding module.
+
+Lives in the ``repro.embedding`` subsystem (it is the contract every
+:class:`~repro.embedding.store.EmbeddingStore` is built against);
+``repro.core.fused_embedding`` re-exports it for older import paths.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["FusedEmbeddingSpec"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedEmbeddingSpec:
+    """Static description of a CTR embedding module.
+
+    Attributes:
+        field_sizes: number of features n_i per field (len = k).
+        dim:         shared embedding dimension d.
+        multi_hot:   max ids per field (1 = one-hot fields).
+        dtype:       parameter dtype.
+        pad_rows_to: pad the mega-table height to a multiple (sharding).
+    """
+    field_sizes: tuple[int, ...]
+    dim: int
+    multi_hot: int = 1
+    dtype: str = "float32"
+    pad_rows_to: int = 1
+
+    @property
+    def k(self) -> int:
+        return len(self.field_sizes)
+
+    @property
+    def rows(self) -> int:
+        """Mega-table height: all fields + 1 zero row (multi-hot masking),
+        padded up for even sharding."""
+        n = int(sum(self.field_sizes)) + 1
+        pad = self.pad_rows_to
+        return ((n + pad - 1) // pad) * pad
+
+    @property
+    def offsets(self) -> np.ndarray:
+        return np.concatenate(
+            [[0], np.cumsum(self.field_sizes)[:-1]]).astype(np.int32)
+
+    @property
+    def zero_row(self) -> int:
+        return int(sum(self.field_sizes))
+
+    @property
+    def n_params(self) -> int:
+        return self.rows * self.dim

@@ -1,0 +1,183 @@
+"""EmbeddingStore — the parameter-server tier behind the fused lookup.
+
+DPIFrame's Alg.-1 mega-table assumes the whole concatenated table sits in
+fast memory; production CTR vocabularies don't fit. HugeCTR's inference
+parameter server (arXiv:2210.08804) answers with a tiered design: a small
+device-resident cache of hot rows over a larger backing store, exploiting
+the zipf skew of real CTR traffic. This module is that tier for the repro:
+
+  ``EmbeddingStore``  the abstraction every embedding consumer talks to —
+                      parameter init/placement, one-hot and multi-hot
+                      lookup, traffic observation, cache bookkeeping.
+  ``DenseStore``      today's monolithic mega-table (the default): one
+                      ``mega_table`` leaf, every lookup one fused gather.
+  ``CachedStore``     (``repro.embedding.cached``) hot-row cache of
+                      capacity C + full backing table + index map.
+
+``FusedEmbeddingCollection`` delegates all lookups and parameter handling
+to its store, so the whole stack — ``kernels/ops.py`` →
+``core/fused_embedding.py`` → ``core/plan.py`` → ``serving/engine.py`` —
+is store-agnostic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels import ops as kops
+
+from .spec import FusedEmbeddingSpec
+
+__all__ = ["StoreStats", "EmbeddingStore", "DenseStore"]
+
+
+@dataclasses.dataclass
+class StoreStats:
+    """Host-side traffic counters of one embedding store.
+
+    ``hits``/``misses`` count *row lookups* (b·k per one-hot batch) against
+    the store's current index map; ``refreshes`` counts cache rebuilds.
+    All zero (and staying zero) for ``DenseStore``.
+    """
+    hits: int = 0
+    misses: int = 0
+    refreshes: int = 0
+
+    @property
+    def lookups(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.lookups
+        return self.hits / n if n else 0.0
+
+
+class EmbeddingStore:
+    """Interface of the embedding parameter tier.
+
+    A store owns (a) the *layout* of embedding parameters — what leaves its
+    param subtree contains and how they shard over a mesh — and (b) the
+    *lookup* that turns per-field ids into embedding rows. Implementations
+    must be bit-exact with each other: a store is a memory-system choice,
+    never a numerics choice (paper Table I discipline).
+    """
+
+    spec: FusedEmbeddingSpec
+    #: True when the store keeps a rebuildable cache tier — engines only
+    #: run the observe/refresh loop (and drop compiled plans on refresh)
+    #: for refreshable stores.
+    refreshable: bool = False
+
+    def __init__(self, spec: FusedEmbeddingSpec):
+        self.spec = spec
+        self.stats = StoreStats()
+
+    # -- params ------------------------------------------------------------
+    def init(self, key: jax.Array) -> dict:
+        """Fresh parameter subtree for this store."""
+        raise NotImplementedError
+
+    def init_dense_table(self, key: jax.Array) -> jax.Array:
+        """The canonical (rows, d) mega-table init shared by every store
+        (so Dense/Cached params built from one key are value-identical)."""
+        spec = self.spec
+        scale = 1.0 / np.sqrt(spec.dim)
+        table = jax.random.normal(
+            key, (spec.rows, spec.dim), dtype=jnp.dtype(spec.dtype)) * scale
+        # zero row (and padding rows) must stay zero for multi-hot masking
+        return table.at[spec.zero_row:].set(0.0)
+
+    def adopt(self, params: dict) -> dict:
+        """Convert another store's param subtree into this store's layout
+        (values preserved bit-for-bit — a store swap is a placement change,
+        not a re-init). Engines use this to retrofit a cache onto a model
+        whose params were built dense."""
+        raise NotImplementedError
+
+    def partition_spec(self, model_axis: str | None = "model") -> dict:
+        """PartitionSpec subtree matching :meth:`init`'s structure."""
+        raise NotImplementedError
+
+    def dense_view(self, params: dict) -> jax.Array:
+        """The full (rows, d) table — the serial/naive level and the
+        sharded shard_map path gather straight from it."""
+        raise NotImplementedError
+
+    # -- lookup ------------------------------------------------------------
+    def lookup(self, params: dict, ids: jax.Array, offsets: jax.Array, *,
+               strategy: str = "auto",
+               interpret: bool | None = None) -> jax.Array:
+        """ids (b, k) -> (b, k*d)."""
+        raise NotImplementedError
+
+    def lookup_multihot(self, params: dict, ids: jax.Array, mask: jax.Array,
+                        offsets: jax.Array, *, strategy: str = "auto",
+                        interpret: bool | None = None) -> jax.Array:
+        """ids/mask (b, k, h) -> (b, k*d) sum-pooled."""
+        raise NotImplementedError
+
+    # -- traffic / cache management ---------------------------------------
+    def observe(self, global_rows: np.ndarray) -> None:
+        """Record served row traffic (host-side; outside jit)."""
+
+    def refresh(self, params: dict) -> dict:
+        """Rebuild any cache tier from observed traffic; returns the
+        (possibly new) param subtree. No-op for cacheless stores."""
+        return params
+
+    @property
+    def cached_traffic_fraction(self) -> float:
+        """Fraction of *observed traffic mass* whose rows are currently
+        cached (1.0 for a store that holds everything in one tier)."""
+        return 1.0
+
+    def describe(self) -> str:
+        """Short identity string (stamped into plan keys and stats)."""
+        raise NotImplementedError
+
+
+class DenseStore(EmbeddingStore):
+    """The monolithic mega-table: everything in one fast-memory tier.
+
+    Param subtree: ``{"mega_table": (rows, d)}`` — exactly the layout the
+    repo used before stores existed, so older callers that hand-build
+    ``{"mega_table": table}`` dicts keep working unchanged.
+    """
+
+    def init(self, key: jax.Array) -> dict:
+        return {"mega_table": self.init_dense_table(key)}
+
+    def adopt(self, params: dict) -> dict:
+        if "mega_table" in params:
+            return params
+        return {"mega_table": params["backing"]}
+
+    def partition_spec(self, model_axis: str | None = "model") -> dict:
+        """Row-sharded (vocab-parallel) placement of the mega-table."""
+        return {"mega_table": P(model_axis, None)}
+
+    def dense_view(self, params: dict) -> jax.Array:
+        return params["mega_table"]
+
+    def lookup(self, params: dict, ids: jax.Array, offsets: jax.Array, *,
+               strategy: str = "auto",
+               interpret: bool | None = None) -> jax.Array:
+        return kops.multi_table_lookup(
+            ids, params["mega_table"], offsets,
+            strategy=strategy, interpret=interpret)
+
+    def lookup_multihot(self, params: dict, ids: jax.Array, mask: jax.Array,
+                        offsets: jax.Array, *, strategy: str = "auto",
+                        interpret: bool | None = None) -> jax.Array:
+        return kops.multi_table_lookup_multihot(
+            ids, mask, params["mega_table"], offsets,
+            strategy=strategy, interpret=interpret)
+
+    def describe(self) -> str:
+        return f"dense(rows={self.spec.rows},d={self.spec.dim})"

@@ -12,6 +12,8 @@ from .ops import (
     fused_cross_v2,
     fused_fm_second_order,
     multi_table_lookup,
+    multi_table_lookup_cached,
+    multi_table_lookup_cached_multihot,
     multi_table_lookup_multihot,
     multi_table_lookup_onehot,
     on_tpu,
@@ -22,6 +24,8 @@ __all__ = [
     "fused_cross_v2",
     "fused_fm_second_order",
     "multi_table_lookup",
+    "multi_table_lookup_cached",
+    "multi_table_lookup_cached_multihot",
     "multi_table_lookup_multihot",
     "multi_table_lookup_onehot",
     "on_tpu",

@@ -136,6 +136,79 @@ def mtl_gather_multihot(flat_rows: jax.Array, mega_table: jax.Array, *,
 
 
 # ---------------------------------------------------------------------------
+# Two-level (cache + backing) gather — the CachedStore lookup
+# ---------------------------------------------------------------------------
+
+def _two_level_kernel(slots_ref, rows_ref, cache_ref, backing_ref, out_ref):
+    # Which tier holds this row was decided by the scalar-prefetched slot
+    # map; both index maps already point at the right block (misses pin the
+    # cache block to slot 0, hits pin the backing block to row 0 — the
+    # wrong-tier fetch is always the same hot line, not a wasted HBM row).
+    del rows_ref
+    p = pl.program_id(0)
+    hot = pl.num_programs(1)
+    j = pl.program_id(1)
+    hit = slots_ref[p * hot + j] >= 0
+    val = jnp.where(hit, cache_ref[...], backing_ref[...])
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = val
+
+    @pl.when(j > 0)
+    def _acc():
+        out_ref[...] += val
+
+
+@functools.partial(jax.jit, static_argnames=("hot", "interpret"))
+def mtl_gather_two_level(flat_rows: jax.Array, slots: jax.Array,
+                         cache: jax.Array, backing: jax.Array, *,
+                         hot: int = 1, interpret: bool = False) -> jax.Array:
+    """Two-level gather: cache hits from the hot-row cache, misses from the
+    backing table, pooled over ``hot`` ids per output row (hot=1 = plain
+    gather, the one-hot path).
+
+    Both the slot and the row are scalar-prefetched, so tier selection
+    happens in the BlockSpec index maps — the TPU analogue of HugeCTR's
+    address-indirection through the inference parameter server's hashmap,
+    with no divergent branching in the kernel body.
+
+    Args:
+        flat_rows: (R*hot,) int32 global rows into ``backing``.
+        slots:     (R*hot,) int32 cache slot per row, -1 = not cached
+                   (= ``slot_of_row[flat_rows]``, pre-gathered outside).
+        cache:     (C, d) hot-row copies.
+        backing:   (N, d) full mega-table.
+
+    Returns:
+        (R, d) gathered (hot=1) or sum-pooled (hot>1) rows.
+    """
+    rh = flat_rows.shape[0]
+    r = rh // hot
+    d = backing.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(r, hot),
+        in_specs=[
+            # hit: the row's cache slot; miss: slot 0 (discarded in-body)
+            pl.BlockSpec((1, d), lambda p, j, slots, rows:
+                         (jnp.maximum(slots[p * hot + j], 0), 0)),
+            # miss: the backing row; hit: row 0 (discarded in-body)
+            pl.BlockSpec((1, d), lambda p, j, slots, rows:
+                         (jnp.where(slots[p * hot + j] >= 0, 0,
+                                    rows[p * hot + j]), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda p, j, slots, rows: (p, 0)),
+    )
+    return pl.pallas_call(
+        _two_level_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((r, d), backing.dtype),
+        interpret=interpret,
+    )(slots, flat_rows, cache, backing)
+
+
+# ---------------------------------------------------------------------------
 # One-hot MXU variant (TPU-only; no GPU analogue)
 # ---------------------------------------------------------------------------
 

@@ -27,6 +27,7 @@ from .fused_fm import fused_fm_second_order
 from .multi_table_lookup import (
     mtl_gather,
     mtl_gather_multihot,
+    mtl_gather_two_level,
     mtl_input_first,
     mtl_onehot,
 )
@@ -34,6 +35,8 @@ from .multi_table_lookup import (
 __all__ = [
     "multi_table_lookup",
     "multi_table_lookup_multihot",
+    "multi_table_lookup_cached",
+    "multi_table_lookup_cached_multihot",
     "fused_cross_v1",
     "fused_cross_v2",
     "fused_fm_second_order",
@@ -89,6 +92,94 @@ def multi_table_lookup(ids: jax.Array, mega_table: jax.Array,
         for i in range(k):
             cols.append(jnp.take(mega_table, ids[:, i] + offsets[i], axis=0))
         return jnp.concatenate(cols, axis=1)
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
+def multi_table_lookup_cached(ids: jax.Array, cache: jax.Array,
+                              backing: jax.Array, slot_of_row: jax.Array,
+                              offsets: jax.Array, *, strategy: str = "auto",
+                              interpret: bool | None = None) -> jax.Array:
+    """Fused lookup through a tiered (cache + backing) embedding store.
+
+    The CachedStore analogue of :func:`multi_table_lookup`: one two-level
+    gather resolves every (field, id) — cached rows from ``cache``, misses
+    from ``backing`` — bit-exact with the dense path because cache rows are
+    verbatim copies.
+
+    Args:
+        ids:         (b, k) int32 per-field local ids.
+        cache:       (C, d) hot-row copies.
+        backing:     (N, d) full mega-table.
+        slot_of_row: (N,) int32 cache slot per global row, -1 = uncached.
+        offsets:     (k,) int32 starting row of each table.
+
+    Returns:
+        (b, k*d) embedding output.
+    """
+    b, k = ids.shape
+    d = backing.shape[1]
+    if interpret is None:
+        interpret = not on_tpu()
+    if strategy == "auto":
+        strategy = "pallas" if on_tpu() else "jnp"
+    rows = _flat_rows(ids, offsets)
+    if strategy == "jnp":
+        out = ref.ref_two_level_gather(rows, slot_of_row, cache, backing)
+    elif strategy == "pallas":
+        slots = jnp.take(slot_of_row, rows, axis=0)
+        out = mtl_gather_two_level(rows, slots, cache, backing,
+                                   interpret=interpret)
+    else:
+        raise ValueError(f"unknown strategy {strategy!r}")
+    return out.reshape(b, k * d)
+
+
+def multi_table_lookup_cached_multihot(ids: jax.Array, mask: jax.Array,
+                                       cache: jax.Array, backing: jax.Array,
+                                       slot_of_row: jax.Array,
+                                       offsets: jax.Array, *,
+                                       strategy: str = "auto",
+                                       interpret: bool | None = None
+                                       ) -> jax.Array:
+    """Multi-hot (pooled) fused lookup through a tiered store.
+
+    Mirrors :func:`multi_table_lookup_multihot` exactly — the jnp path
+    repeats the dense oracle's mask-multiply-sum with the gather swapped
+    for the two-level one, the pallas path redirects masked slots to the
+    backing zero row — so either store produces bitwise-identical pooling.
+
+    Args:
+        ids:         (b, k, h) local ids; invalid slots arbitrary.
+        mask:        (b, k, h) 1 for valid slots, 0 otherwise.
+        cache:       (C, d) hot-row copies.
+        backing:     (N, d) full mega-table **with a trailing all-zero row**.
+        slot_of_row: (N,) int32 index map.
+        offsets:     (k,) table starts.
+
+    Returns:
+        (b, k*d) pooled output.
+    """
+    b, k, h = ids.shape
+    d = backing.shape[1]
+    if interpret is None:
+        interpret = not on_tpu()
+    if strategy == "auto":
+        strategy = "pallas" if on_tpu() else "jnp"
+    if strategy == "jnp":
+        rows = (ids.astype(jnp.int32)
+                + offsets[None, :, None].astype(jnp.int32)).reshape(-1)
+        vals = ref.ref_two_level_gather(rows, slot_of_row, cache, backing)
+        pooled = jnp.sum(vals.reshape(b, k, h, d)
+                         * mask[..., None].astype(backing.dtype), axis=2)
+        return pooled.reshape(b, k * d)
+    if strategy == "pallas":
+        zero_row = backing.shape[0] - 1
+        rows = ids.astype(jnp.int32) + offsets[None, :, None].astype(jnp.int32)
+        rows = jnp.where(mask.astype(bool), rows, zero_row).reshape(-1)
+        slots = jnp.take(slot_of_row, rows, axis=0)
+        out = mtl_gather_two_level(rows, slots, cache, backing, hot=h,
+                                   interpret=interpret)
+        return out.reshape(b, k * d)
     raise ValueError(f"unknown strategy {strategy!r}")
 
 

@@ -94,6 +94,31 @@ def ref_multi_hot_lookup(ids, weights, mega_table, offsets):
     return pooled.reshape(b, k * d)
 
 
+def ref_two_level_gather(flat_rows, slot_of_row, cache, backing):
+    """Two-level (cache + backing) gather oracle — the CachedStore lookup.
+
+    Hits read their row from ``cache``, misses fall through to ``backing``;
+    the not-taken tier is pinned to its row 0 (same address indirection the
+    Pallas kernel performs in its index maps). Because cache rows are
+    verbatim copies of backing rows, the result is *bitwise* equal to
+    ``jnp.take(backing, flat_rows)``.
+
+    Args:
+        flat_rows:   (R,) int32 global rows.
+        slot_of_row: (N,) int32 cache slot per global row, -1 = uncached.
+        cache:       (C, d) hot-row copies.
+        backing:     (N, d) full mega-table.
+
+    Returns:
+        (R, d) gathered rows.
+    """
+    slots = jnp.take(slot_of_row, flat_rows, axis=0)
+    hit = slots >= 0
+    from_cache = jnp.take(cache, jnp.maximum(slots, 0), axis=0)
+    from_backing = jnp.take(backing, jnp.where(hit, 0, flat_rows), axis=0)
+    return jnp.where(hit[:, None], from_cache, from_backing)
+
+
 # ---------------------------------------------------------------------------
 # Fused non-GEMM oracles (C5)
 # ---------------------------------------------------------------------------

@@ -27,28 +27,43 @@ def _make_policy(args):
 
 
 def serve_ctr(args) -> None:
-    from repro.data.synthetic import CRITEO
+    from repro.data.synthetic import CRITEO, zipf_ids
     from repro.models.ctr import CTR_MODELS
     from repro.serving import InferenceEngine
     schema = CRITEO.scaled(100_000)
     spec = ctr_spec(args.model, "criteo", 16, 256, max_field=100_000)
     model = CTR_MODELS[args.model](spec)
     params = model.init(jax.random.PRNGKey(0))
+    store = None
+    if args.store == "cached":
+        from repro.embedding import CachedStore
+        store = CachedStore(spec.embedding_spec(),
+                            capacity=args.cache_capacity)
     eng = InferenceEngine(model, params, level=args.level,
-                          policy=_make_policy(args))
+                          policy=_make_policy(args), store=store,
+                          refresh_every=args.refresh_every)
     eng.warmup()
-    rng = np.random.default_rng(0)
-    for _ in range(args.requests):
-        eng.submit(np.array([rng.integers(0, s)
-                             for s in schema.field_sizes], dtype=np.int32))
+    if args.zipf:
+        ids = np.asarray(zipf_ids(jax.random.PRNGKey(0), args.requests,
+                                  schema.field_sizes, exponent=args.zipf))
+        eng.submit_many(list(ids))
+    else:
+        rng = np.random.default_rng(0)
+        for _ in range(args.requests):
+            eng.submit(np.array([rng.integers(0, s)
+                                 for s in schema.field_sizes],
+                                dtype=np.int32))
     scores = np.concatenate([eng.serve_pending(), eng.flush()])
     s = eng.stats
+    emb = (f"  emb_hit={s.emb_cache_hit_rate:.1%} "
+           f"cached_traffic={s.emb_cached_traffic_fraction:.1%} "
+           f"refreshes={s.emb_cache_refreshes}" if store else "")
     print(f"[serve] {args.model} level={args.level} policy={args.policy}: "
           f"{s.n_requests} requests in {s.n_batches} batches  "
           f"p50={s.p50_ms:.1f}ms p99={s.p99_ms:.1f}ms  "
           f"plans={len(eng.cached_plans)} cache_h/m="
           f"{s.cache_hits}/{s.cache_misses} pad_waste={s.padding_waste:.1%} "
-          f"mean_score={scores.mean():.4f}")
+          f"mean_score={scores.mean():.4f}{emb}")
 
 
 def serve_lm(args) -> None:
@@ -78,6 +93,15 @@ def main() -> None:
                     help="comma-separated bucket ladder for bucketed/timeout")
     ap.add_argument("--max-wait-ms", type=float, default=5.0)
     ap.add_argument("--requests", type=int, default=500)
+    ap.add_argument("--store", default="dense", choices=["dense", "cached"],
+                    help="embedding store tier (repro.embedding)")
+    ap.add_argument("--cache-capacity", type=int, default=65536,
+                    help="hot-row capacity C for --store cached")
+    ap.add_argument("--refresh-every", type=int, default=None,
+                    help="rebuild the hot cache every N served batches")
+    ap.add_argument("--zipf", type=float, default=None,
+                    help="zipf exponent for request traffic (default: "
+                         "uniform random ids)")
     ap.add_argument("--max-new", type=int, default=16)
     args = ap.parse_args()
     if args.mode == "ctr":

@@ -84,15 +84,20 @@ def mlp_init(key, dims: tuple[int, ...], dtype) -> list[dict]:
 def emit_embedding_ops(g: OpGraph, emb: FusedEmbeddingCollection,
                        params: dict, level: str, *, out: str = "x_embed",
                        prefix: str = "emb") -> None:
-    """Embedding module ops. ``naive`` = k serial gathers + concat (the
-    baseline the paper measures against); otherwise ONE fused lookup."""
+    """Embedding module ops over the store subtree at ``params[prefix]``.
+
+    ``naive`` = k serial gathers + concat off the store's dense view (the
+    baseline the paper measures against); otherwise ONE fused lookup
+    through whatever tiers the store keeps (mega-table or cache+backing).
+    """
+    store_params = params[prefix]
     if level == "naive":
         k = emb.spec.k
         offs = emb.spec.offsets
+        table = emb.dense_view(store_params)
         for i in range(k):
             def one_field(ids, _i=i, _o=int(offs[i])):
-                return jnp.take(params[f"{prefix}_mega"],
-                                ids[:, _i] + _o, axis=0)
+                return jnp.take(table, ids[:, _i] + _o, axis=0)
             g.add(Op(f"{prefix}_lookup_{i}", one_field, ("ids",),
                      f"{prefix}_f{i}", module="embedding"))
         g.add(Op(f"{prefix}_concat",
@@ -101,8 +106,7 @@ def emit_embedding_ops(g: OpGraph, emb: FusedEmbeddingCollection,
                  out, module="embedding"))
     else:
         g.add(Op(f"{prefix}_fused",
-                 lambda ids: emb.apply({"mega_table": params[f"{prefix}_mega"]},
-                                       ids),
+                 lambda ids: emb.apply(store_params, ids),
                  ("ids",), out, module="embedding"))
 
 
@@ -174,11 +178,24 @@ register_fused_kernel(
 # ---------------------------------------------------------------------------
 
 class CTRModel:
-    """Base: shares embedding init + trainer-facing apply/loss."""
+    """Base: shares embedding init/placement + trainer-facing apply/loss.
 
-    def __init__(self, spec: CTRModelSpec):
+    The embedding path runs through ``repro.embedding``: every model keys
+    its param tree with one subtree per :class:`FusedEmbeddingCollection`
+    (``params["emb"]`` for the main table; wide/FM variants add their own),
+    whose internal layout belongs to the collection's store. Pass
+    ``store=`` (e.g. ``repro.embedding.CachedStore``) to tier the main
+    table; default is the monolithic ``DenseStore``.
+    """
+
+    #: param-tree key of the main (tierable) embedding subtree — the one
+    #: ``store=``/``use_store``/``refresh_cache`` operate on
+    main_embedding_key = "emb"
+
+    def __init__(self, spec: CTRModelSpec, store=None):
         self.spec = spec
-        self.embedding = FusedEmbeddingCollection(spec.embedding_spec())
+        self.embedding = FusedEmbeddingCollection(spec.embedding_spec(),
+                                                  store=store)
 
     # subclasses fill these in -------------------------------------------------
     def init(self, key: jax.Array) -> dict:
@@ -186,6 +203,35 @@ class CTRModel:
 
     def build_graph(self, params: dict, level: str) -> OpGraph:
         raise NotImplementedError
+
+    # embedding-store surface --------------------------------------------------
+    def embedding_collections(self) -> dict:
+        """Param-tree key -> collection, for every embedding subtree this
+        model owns. Placement and store plumbing walk this — never param
+        *names* (the old ``"mega" in names`` heuristic broke on renames)."""
+        return {self.main_embedding_key: self.embedding}
+
+    def partition_spec(self, params: dict, model_axis: str = "model"):
+        """Mesh placement for ``params``: embedding subtrees per their
+        store's ``partition_spec`` (vocab-parallel tables, replicated cache
+        tiers), everything else replicated (CTR dense nets are
+        latency-bound)."""
+        from jax.sharding import PartitionSpec as P
+        specs = jax.tree.map(lambda _: P(), params)
+        for key, coll in self.embedding_collections().items():
+            if key in params:
+                specs[key] = coll.partition_spec(model_axis)
+        return specs
+
+    def use_store(self, store, params: dict) -> dict:
+        """Swap the main table's store, converting its param subtree (at
+        ``main_embedding_key``) into the new layout (bit-exact — see
+        ``EmbeddingStore.adopt``). Returns the updated param tree; the
+        model's collection is rebound."""
+        self.embedding = FusedEmbeddingCollection(self.spec.embedding_spec(),
+                                                  store=store)
+        key = self.main_embedding_key
+        return {**params, key: store.adopt(params[key])}
 
     # shared -------------------------------------------------------------------
     def compile(self, params: dict, level: str = "dual",

@@ -27,7 +27,7 @@ class DCN(CTRModel):
         keys = jax.random.split(key, 4 + spec.cross_layers)
         d_in = spec.input_dim
         params: dict = {
-            "emb_mega": self.embedding.init(keys[0])["mega_table"],
+            "emb": self.embedding.init(keys[0]),
             "mlp": mlp_init(keys[1], (d_in, *spec.hidden), dtype),
             "head": init_dense(keys[2], d_in + spec.hidden[-1], 1, dtype),
         }

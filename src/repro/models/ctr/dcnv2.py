@@ -24,7 +24,7 @@ class DCNv2(CTRModel):
         keys = jax.random.split(key, 3 + spec.cross_layers)
         d_in = spec.input_dim
         params: dict = {
-            "emb_mega": self.embedding.init(keys[0])["mega_table"],
+            "emb": self.embedding.init(keys[0]),
             "mlp": mlp_init(keys[1], (d_in, *spec.hidden), dtype),
             "head": init_dense(keys[2], d_in + spec.hidden[-1], 1, dtype),
             "cross": [init_dense(keys[3 + li], d_in, d_in, dtype)

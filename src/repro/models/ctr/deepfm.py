@@ -19,8 +19,9 @@ from .common import (CTRModel, emit_embedding_ops, emit_mlp_ops, init_dense,
 
 
 class DeepFM(CTRModel):
-    def __init__(self, spec):
-        super().__init__(spec)
+    def __init__(self, spec, store=None):
+        super().__init__(spec, store=store)
+        # FM first-order d=1 tables are tiny — always dense
         self.wide_embedding = FusedEmbeddingCollection(spec.wide_spec())
 
     def init(self, key: jax.Array) -> dict:
@@ -28,12 +29,16 @@ class DeepFM(CTRModel):
         dtype = jnp.dtype(spec.dtype)
         keys = jax.random.split(key, 4)
         return {
-            "emb_mega": self.embedding.init(keys[0])["mega_table"],
-            "fm_w_mega": self.wide_embedding.init(keys[1])["mega_table"],
+            "emb": self.embedding.init(keys[0]),
+            "fm_w": self.wide_embedding.init(keys[1]),
             "fm_bias": jnp.zeros((1,), dtype=dtype),
             "mlp": mlp_init(keys[2], (spec.input_dim, *spec.hidden), dtype),
             "deep_head": init_dense(keys[3], spec.hidden[-1], 1, dtype),
         }
+
+    def embedding_collections(self) -> dict:
+        return {self.main_embedding_key: self.embedding,
+                "fm_w": self.wide_embedding}
 
     def build_graph(self, params: dict, level: str) -> OpGraph:
         spec = self.spec
@@ -43,8 +48,7 @@ class DeepFM(CTRModel):
         # explicit (FM): first-order linear term
         fb = params["fm_bias"]
         g.add(Op("fm_lin_lookup",
-                 lambda ids: self.wide_embedding.apply(
-                     {"mega_table": params["fm_w_mega"]}, ids),
+                 lambda ids: self.wide_embedding.apply(params["fm_w"], ids),
                  ("ids",), "fm_lin_terms", module="explicit"))
         g.add(Op("fm_lin_sum",
                  lambda t, _b=fb: jnp.sum(t, axis=1, keepdims=True) + _b,

@@ -17,8 +17,9 @@ from .common import (CTRModel, emit_embedding_ops, emit_mlp_ops, init_dense,
 
 
 class WideDeep(CTRModel):
-    def __init__(self, spec):
-        super().__init__(spec)
+    def __init__(self, spec, store=None):
+        super().__init__(spec, store=store)
+        # wide d=1 tables are tiny — always dense, never worth tiering
         self.wide_embedding = FusedEmbeddingCollection(spec.wide_spec())
 
     def init(self, key: jax.Array) -> dict:
@@ -26,12 +27,16 @@ class WideDeep(CTRModel):
         dtype = jnp.dtype(spec.dtype)
         keys = jax.random.split(key, 4)
         return {
-            "emb_mega": self.embedding.init(keys[0])["mega_table"],
-            "wide_mega": self.wide_embedding.init(keys[1])["mega_table"],
+            "emb": self.embedding.init(keys[0]),
+            "wide": self.wide_embedding.init(keys[1]),
             "wide_bias": jnp.zeros((1,), dtype=dtype),
             "mlp": mlp_init(keys[2], (spec.input_dim, *spec.hidden), dtype),
             "deep_head": init_dense(keys[3], spec.hidden[-1], 1, dtype),
         }
+
+    def embedding_collections(self) -> dict:
+        return {self.main_embedding_key: self.embedding,
+                "wide": self.wide_embedding}
 
     def build_graph(self, params: dict, level: str) -> OpGraph:
         g = OpGraph(["ids"])
@@ -43,11 +48,11 @@ class WideDeep(CTRModel):
         if level == "naive":
             offs = self.wide_embedding.spec.offsets
             k = self.spec.k
+            wide_table = self.wide_embedding.dense_view(params["wide"])
             for i in range(k):
                 g.add(Op(f"wide_lookup_{i}",
                          lambda ids, _i=i, _o=int(offs[i]):
-                             jnp.take(params["wide_mega"], ids[:, _i] + _o,
-                                      axis=0),
+                             jnp.take(wide_table, ids[:, _i] + _o, axis=0),
                          ("ids",), f"wide_f{i}", module="explicit"))
             g.add(Op("wide_concat",
                      lambda *cols: jnp.concatenate(cols, axis=1),
@@ -55,8 +60,8 @@ class WideDeep(CTRModel):
                      "wide_terms", module="explicit"))
         else:
             g.add(Op("wide_fused",
-                     lambda ids: self.wide_embedding.apply(
-                         {"mega_table": params["wide_mega"]}, ids),
+                     lambda ids: self.wide_embedding.apply(params["wide"],
+                                                           ids),
                      ("ids",), "wide_terms", module="explicit"))
         g.add(Op("wide_sum",
                  lambda t, _b=wb: jnp.sum(t, axis=1, keepdims=True) + _b,

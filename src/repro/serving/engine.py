@@ -13,9 +13,15 @@ The engine owns
   (hit/miss counts are in ``stats``);
 * a **batching policy** (``repro.serving.batching``) deciding how queued
   single-sample requests group into padded device batches;
-* **latency accounting** separating queueing from compute, plus per-bucket
-  compile counts and padding-waste fractions so benchmarks can quantify the
-  bucketing win.
+* **latency accounting** separating queueing from compute (bounded rolling
+  p50/p99 window — see ``EngineStats``), plus per-bucket compile counts and
+  padding-waste fractions so benchmarks can quantify the bucketing win;
+* an optional **embedding store** tier (``store=CachedStore(...)``): the
+  engine feeds served id traffic to the store's admission counters,
+  rebuilds the hot-row cache on ``refresh_cache()`` (or every
+  ``refresh_every`` batches), and surfaces hit-rate / cached-traffic /
+  refresh counters in ``stats`` — the HugeCTR inference-parameter-server
+  loop over DPIFrame plans.
 
 ``CTRServingEngine`` (the old fixed-batch surface) remains as a deprecated
 shim: ``InferenceEngine`` with ``FixedBatch(batch_size)``.
@@ -43,16 +49,41 @@ __all__ = ["InferenceEngine", "EngineStats", "CTRServingEngine",
 @dataclasses.dataclass
 class EngineStats:
     """Serving counters: request/batch totals, latency split, plan-cache
-    behaviour, and padding waste per bucket."""
+    behaviour, padding waste per bucket, and embedding-store cache health.
+
+    Latency accounting is a **bounded rolling window**: ``latency_ms``
+    keeps only the most recent ``latency_window`` per-request samples
+    (default 8192), so memory stays O(window) under sustained traffic.
+    ``p50_ms``/``p99_ms`` are therefore *recent* percentiles — over the
+    last ``latency_window`` served requests, not engine lifetime — which
+    is what an SLO monitor wants anyway; lifetime totals remain exact in
+    ``n_requests``/``compute_ms_total``.
+
+    The ``emb_*`` counters mirror the engine's embedding store
+    (``CachedStore``): row-lookup hits/misses against the current index
+    map, cache rebuilds, and the fraction of observed traffic mass whose
+    rows are currently cached (the fraction is a full-vocabulary scan, so
+    it is refreshed at ``refresh_cache`` time, not per batch). All zero
+    for the default ``DenseStore``.
+    """
     n_requests: int = 0
     n_batches: int = 0
     compute_ms_total: float = 0.0
-    latency_ms: list = dataclasses.field(default_factory=list)
+    latency_window: int = 8192
+    latency_ms: deque = None
     cache_hits: int = 0
     cache_misses: int = 0
     compile_ms_per_bucket: dict = dataclasses.field(default_factory=dict)
     batches_per_bucket: dict = dataclasses.field(default_factory=dict)
     padded_rows_total: int = 0
+    emb_cache_hits: int = 0
+    emb_cache_misses: int = 0
+    emb_cache_refreshes: int = 0
+    emb_cached_traffic_fraction: float = 0.0
+
+    def __post_init__(self):
+        self.latency_ms = deque(self.latency_ms or (),
+                                maxlen=self.latency_window)
 
     @property
     def p50_ms(self) -> float:
@@ -68,6 +99,12 @@ class EngineStats:
         rows = self.n_requests + self.padded_rows_total
         return self.padded_rows_total / rows if rows else 0.0
 
+    @property
+    def emb_cache_hit_rate(self) -> float:
+        """Row-lookup hit rate of the embedding store's hot cache."""
+        n = self.emb_cache_hits + self.emb_cache_misses
+        return self.emb_cache_hits / n if n else 0.0
+
 
 # deprecated alias — the old engine exported its stats under this name
 ServeStats = EngineStats
@@ -82,27 +119,87 @@ class InferenceEngine:
         level: Fig.-8 executor level for every plan this engine compiles.
         policy: batching policy; default ``BucketedBatch()``.
         branch_order: breadth-first head-branch choice (§V-H).
-        mesh: optional device mesh — plans shard the embedding mega-tables
-            row-wise over its model axis.
+        mesh: optional device mesh — plans shard the embedding tables
+            row-wise over its model axis (placement delegated to the
+            model/store ``partition_spec``).
         donate: donate input buffers to the compiled steps (level "dual"
             only; the eager levels ignore it).
+        store: optional ``repro.embedding`` store (e.g. ``CachedStore``)
+            to retrofit onto the model's main embedding table; ``params``
+            are converted bit-exactly into the store's layout. The engine
+            feeds every served id batch back to the store's admission
+            counters and exposes hit-rate/refresh counters in ``stats``.
+        refresh_every: rebuild the store's hot cache every N served
+            batches (HugeCTR-style refresh interval). Each refresh
+            invalidates this engine's compiled plans (they bake the old
+            cache contents), so pick N large enough to amortize the
+            recompiles. ``None`` = manual ``refresh_cache()`` only.
+        latency_window: size of the rolling latency window behind
+            ``stats.p50_ms``/``p99_ms`` (see ``EngineStats``).
     """
 
     def __init__(self, model, params, *, level: str = "dual",
                  policy: BatchPolicy | None = None,
                  branch_order: str = "longer_first",
                  mesh: jax.sharding.Mesh | None = None,
-                 donate: bool = False):
+                 donate: bool = False,
+                 store=None,
+                 refresh_every: int | None = None,
+                 latency_window: int = 8192):
         self.model = model
+        if store is not None:
+            params = model.use_store(store, params)
         self.params = params
         self.level = level
         self.policy = policy if policy is not None else BucketedBatch()
         self.branch_order = branch_order
         self.mesh = mesh
         self.donate = donate
+        self.refresh_every = refresh_every
         self._plans: dict[PlanKey, InferencePlan] = {}
         self._queue: deque = deque()
-        self.stats = EngineStats()
+        self.stats = EngineStats(latency_window=latency_window)
+
+    # -- embedding store -----------------------------------------------------
+    @property
+    def store(self):
+        """The model's main embedding store (DenseStore unless swapped)."""
+        coll = getattr(self.model, "embedding", None)
+        return getattr(coll, "store", None)
+
+    def _observe_traffic(self, rows: np.ndarray) -> None:
+        """Feed served ids to the store's admission counters and mirror
+        the store's health into ``stats`` (host-side, outside jit). Only
+        refreshable (cache-tiered) stores pay this — and the O(rows)
+        cached-traffic scan is deferred to refresh time, not per batch."""
+        coll = getattr(self.model, "embedding", None)
+        if coll is None or not coll.store.refreshable:
+            return
+        coll.observe(rows)
+        st, ss = self.stats, coll.store.stats
+        st.emb_cache_hits = ss.hits
+        st.emb_cache_misses = ss.misses
+        st.emb_cache_refreshes = ss.refreshes
+
+    def refresh_cache(self) -> None:
+        """Re-admit hot rows from observed traffic into the store's cache
+        and drop every compiled plan (their steps captured the old cache
+        tensors). The next batch per bucket recompiles — the cost
+        ``refresh_every`` amortizes. No-op for cacheless stores."""
+        store = self.store
+        if store is None or not store.refreshable:
+            return
+        key = getattr(self.model, "main_embedding_key", "emb")
+        self.params = {**self.params,
+                       key: store.refresh(self.params[key])}
+        self._plans.clear()
+        self.stats.emb_cache_refreshes = store.stats.refreshes
+        self.stats.emb_cached_traffic_fraction = store.cached_traffic_fraction
+
+    def _maybe_auto_refresh(self) -> None:
+        if (self.refresh_every
+                and self.stats.n_batches % self.refresh_every == 0):
+            self.refresh_cache()
 
     # -- plan cache ----------------------------------------------------------
     def _plan_key(self, bucket: int) -> PlanKey:
@@ -172,6 +269,7 @@ class InferenceEngine:
             items = [self._queue.popleft() for _ in range(decision.take)]
             t_submit = [it[0] for it in items]
             rows = np.stack([it[1] for it in items])
+            self._observe_traffic(rows)
             plan = self.plan_for(decision.bucket)
             t0 = time.perf_counter()
             # plan.predict pads to the bucket shape and slices the padding
@@ -187,6 +285,7 @@ class InferenceEngine:
             st.padded_rows_total += decision.bucket - decision.take
             st.compute_ms_total += (t1 - t0) * 1e3
             st.latency_ms.extend((t1 - ts) * 1e3 for ts in t_submit)
+            self._maybe_auto_refresh()
         return np.concatenate(out) if out else np.empty((0,))
 
     # -- one-shot --------------------------------------------------------------
@@ -204,6 +303,7 @@ class InferenceEngine:
         if b > largest:
             return np.concatenate([self.predict(ids[i:i + largest])
                                    for i in range(0, b, largest)])
+        self._observe_traffic(ids)
         bucket = min(bk for bk in self.policy.buckets if bk >= b)
         return self.plan_for(bucket).predict(ids)
 

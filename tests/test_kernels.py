@@ -136,6 +136,65 @@ def test_multihot(h):
 
 
 # ---------------------------------------------------------------------------
+# two-level (cache + backing) gather
+# ---------------------------------------------------------------------------
+
+def _split_cache(rng, mega, capacity):
+    """Random hot set of ``capacity`` rows + its slot map."""
+    n = mega.shape[0]
+    hot = np.sort(rng.choice(n, size=capacity, replace=False))
+    slot_of_row = np.full(n, -1, dtype=np.int32)
+    slot_of_row[hot] = np.arange(capacity, dtype=np.int32)
+    cache = jnp.take(mega, jnp.asarray(hot), axis=0)
+    return cache, jnp.asarray(slot_of_row)
+
+
+@pytest.mark.parametrize("capacity", [1, 16, 48])
+def test_two_level_gather_matches_dense(capacity):
+    rng = np.random.default_rng(capacity)
+    sizes, d, b = [13, 29, 6], 16, 24
+    _, mega, offsets = make_tables(rng, sizes, d, jnp.float32)
+    cache, slot_of_row = _split_cache(rng, mega, capacity)
+    ids = jnp.asarray(
+        np.stack([rng.integers(0, n, size=b) for n in sizes], axis=1),
+        dtype=jnp.int32)
+    want = ops.multi_table_lookup(ids, mega, offsets, strategy="jnp")
+    got = ops.multi_table_lookup_cached(ids, cache, mega, slot_of_row,
+                                        offsets, strategy="jnp")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    got_pl = ops.multi_table_lookup_cached(ids, cache, mega, slot_of_row,
+                                           offsets, strategy="pallas",
+                                           interpret=True)
+    np.testing.assert_array_equal(np.asarray(got_pl), np.asarray(want))
+
+
+@pytest.mark.parametrize("h", [1, 3])
+def test_two_level_multihot_matches_dense(h):
+    rng = np.random.default_rng(h)
+    sizes, d, b = [13, 29, 6], 16, 12
+    k = len(sizes)
+    _, mega, offsets = make_tables(rng, sizes, d, jnp.float32)
+    mega_z = jnp.concatenate([mega, jnp.zeros((1, d), jnp.float32)], axis=0)
+    cache, slot_of_row = _split_cache(rng, mega_z, 16)
+    ids = jnp.asarray(
+        np.stack([rng.integers(0, n, size=(b, h)) for n in sizes], axis=1),
+        dtype=jnp.int32)
+    mask = jnp.asarray(rng.integers(0, 2, size=(b, k, h)), dtype=jnp.float32)
+    want_jnp = ops.multi_table_lookup_multihot(ids, mask, mega_z, offsets,
+                                               strategy="jnp")
+    got_jnp = ops.multi_table_lookup_cached_multihot(
+        ids, mask, cache, mega_z, slot_of_row, offsets, strategy="jnp")
+    np.testing.assert_array_equal(np.asarray(got_jnp), np.asarray(want_jnp))
+    want_pl = ops.multi_table_lookup_multihot(ids, mask, mega_z, offsets,
+                                              strategy="pallas",
+                                              interpret=True)
+    got_pl = ops.multi_table_lookup_cached_multihot(
+        ids, mask, cache, mega_z, slot_of_row, offsets, strategy="pallas",
+        interpret=True)
+    np.testing.assert_array_equal(np.asarray(got_pl), np.asarray(want_pl))
+
+
+# ---------------------------------------------------------------------------
 # fused non-GEMM kernels
 # ---------------------------------------------------------------------------
 

@@ -207,3 +207,99 @@ def test_deprecated_engine_still_serves():
     scores = eng.serve_pending()
     assert scores.shape == (50,)
     assert eng.stats.n_batches == 2             # 32 full + 18 padded
+
+
+# --- bounded latency window (ISSUE-2 satellite) ------------------------------
+
+def test_latency_window_is_bounded():
+    """p50/p99 are rolling-window percentiles; the sample buffer must not
+    grow without bound under sustained traffic."""
+    model, params = make()
+    eng = InferenceEngine(model, params, policy=FixedBatch(8),
+                          latency_window=16)
+    for _ in range(6):
+        eng.submit_many(rows_of(8))
+        eng.serve_pending()
+    assert eng.stats.n_requests == 48            # lifetime totals stay exact
+    assert len(eng.stats.latency_ms) == 16       # window stays bounded
+    assert eng.stats.p99_ms >= eng.stats.p50_ms >= 0.0
+
+
+# --- embedding-store plumbing ------------------------------------------------
+
+def test_engine_with_cached_store_matches_dense():
+    from repro.embedding import CachedStore
+    model, params = make()
+    eng_d = InferenceEngine(model, params, policy=BucketedBatch((8, 16)))
+    rows = rows_of(21)
+    eng_d.submit_many(rows)
+    want = eng_d.serve_pending()
+
+    model_c, params_c = make()
+    store = CachedStore(model_c.spec.embedding_spec(), capacity=256)
+    eng_c = InferenceEngine(model_c, params_c,
+                            policy=BucketedBatch((8, 16)), store=store)
+    eng_c.submit_many(rows)
+    got = eng_c.serve_pending()
+    np.testing.assert_array_equal(got, want)
+    st = eng_c.stats
+    assert st.emb_cache_hits + st.emb_cache_misses \
+        == 21 * model_c.spec.k                   # every served row observed
+    assert eng_c.store is store
+    # dense engine never counts embedding-cache traffic
+    assert eng_d.stats.emb_cache_hits == eng_d.stats.emb_cache_misses == 0
+
+
+def test_engine_refresh_cache_invalidates_plans_and_stays_exact():
+    from repro.embedding import CachedStore
+    model, params = make()
+    direct = InferenceEngine(model, params, policy=FixedBatch(8))
+    rows = rows_of(16, seed=3)
+    want = direct.predict(np.stack(rows))
+
+    model_c, params_c = make()
+    store = CachedStore(model_c.spec.embedding_spec(), capacity=64)
+    eng = InferenceEngine(model_c, params_c, policy=FixedBatch(8),
+                          store=store)
+    got0 = eng.predict(np.stack(rows))
+    assert len(eng.cached_plans) == 1
+    eng.refresh_cache()
+    assert len(eng.cached_plans) == 0            # plans baked the old cache
+    assert eng.stats.emb_cache_refreshes == 1
+    got1 = eng.predict(np.stack(rows))           # recompiles, same scores
+    np.testing.assert_array_equal(got0, got1)
+    np.testing.assert_array_equal(got1, want)
+
+
+def test_engine_auto_refresh_every_n_batches():
+    from repro.embedding import CachedStore
+    model, params = make()
+    store = CachedStore(model.spec.embedding_spec(), capacity=64)
+    eng = InferenceEngine(model, params, policy=FixedBatch(8),
+                          store=store, refresh_every=2)
+    for _ in range(4):
+        eng.submit_many(rows_of(8))
+        eng.serve_pending()
+    assert store.stats.refreshes == 2            # batches 2 and 4
+    assert eng.stats.emb_cache_refreshes == 2
+
+
+def test_predict_chunking_through_cached_store():
+    """Oversize one-shot batches chunk through the largest bucket with the
+    tiered store in the loop — scores stay bit-exact with the dense path."""
+    from repro.embedding import CachedStore
+    model, params = make()
+    dense_eng = InferenceEngine(model, params, policy=BucketedBatch((8, 16)))
+    rows = np.stack(rows_of(37, seed=9))         # > largest bucket
+    want = dense_eng.predict(rows)
+
+    model_c, params_c = make()
+    eng = InferenceEngine(model_c, params_c, policy=BucketedBatch((8, 16)),
+                          store=CachedStore(model_c.spec.embedding_spec(),
+                                            capacity=128))
+    got = eng.predict(rows)
+    assert got.shape == (37,)
+    assert set(b for _, _, b in
+               [(k.model, k.level, k.batch_size) for k in eng.cached_plans]) \
+        <= {8, 16}
+    np.testing.assert_array_equal(got, want)
