@@ -27,7 +27,7 @@ def main() -> None:
 
     from . import (accuracy_parity, breakdown, e2e_speedup, embedding_cache,
                    embedding_sensitivity, roofline_report, scheduling,
-                   serving_batching, workload_allocation)
+                   serving_async, serving_batching, workload_allocation)
     suites = {
         "accuracy_parity": accuracy_parity,       # Table I
         "e2e_speedup": e2e_speedup,               # Fig. 7 / Table II
@@ -37,6 +37,7 @@ def main() -> None:
         "workload_allocation": workload_allocation,      # Fig. 11
         "scheduling": scheduling,                 # Fig. 12/13
         "serving_batching": serving_batching,     # Fig. 7 serving policies
+        "serving_async": serving_async,           # async runtime + refresh
         "roofline_report": roofline_report,       # §Roofline
     }
     only = set(args.only.split(",")) if args.only else None

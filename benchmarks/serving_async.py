@@ -1,0 +1,153 @@
+"""Async serving runtime benchmark — sync drain vs futures intake, and
+plan-cache survival across embedding-cache refreshes.
+
+Three measurements on the same zipf request stream:
+
+  1. **sync**: the caller submits a wave then drains it (`serve_pending`)
+     — the pre-runtime serving loop, intake blocked on compute.
+  2. **async**: the background worker drains the queue through the same
+     policy while the caller keeps submitting; per-request futures
+     resolve as batches complete (PCDF's full-link-parallel loop).
+  3. **refresh survival**: a `CachedStore` engine refreshes its hot-row
+     cache repeatedly under traffic; because the store tensors are
+     runtime inputs of every compiled plan, the plan cache must survive
+     each refresh with zero new compiles (`survived=True` in the derived
+     column — the HugeCTR online-refresh property).
+
+Throughput deltas on CPU are modest (compute dominates); the structural
+counters (batches formed without caller polling, compiles across
+refreshes) are the point.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+
+from repro.configs import ctr_spec
+from repro.data.synthetic import CRITEO, zipf_ids
+from repro.embedding import CachedStore
+from repro.models.ctr import CTR_MODELS
+from repro.serving import (BucketedBatch, InferenceEngine, ServingRuntime,
+                           TimeoutBatch)
+
+from .common import emit
+
+MAX_FIELD = 100_000
+
+
+def _stream(schema, n, exponent=1.1, seed=0):
+    return np.asarray(zipf_ids(jax.random.PRNGKey(seed), n,
+                               schema.field_sizes, exponent=exponent))
+
+
+def _build(model_name, max_field, store=None, **eng_kwargs):
+    spec = ctr_spec(model_name, "criteo", 16, 256, max_field=max_field)
+    model = CTR_MODELS[model_name](spec)
+    params = model.init(jax.random.PRNGKey(0))
+    return spec, InferenceEngine(model, params, store=store, **eng_kwargs)
+
+
+def _sync(eng, ids, waves):
+    t0 = time.perf_counter()
+    for wave in np.array_split(ids, waves):
+        eng.submit_many(list(wave))
+        eng.serve_pending()
+    eng.flush()
+    return time.perf_counter() - t0
+
+
+def _async(eng, ids):
+    eng.start()
+    t0 = time.perf_counter()
+    futs = eng.submit_many(list(ids))
+    for f in futs:
+        f.result(timeout=300.0)
+    dt = time.perf_counter() - t0
+    eng.stop()
+    return dt
+
+
+def run(quick: bool = False, dry: bool = False) -> dict:
+    n = 64 if dry else (400 if quick else 2000)
+    ladder = (8, 16) if dry else (32, 64, 128, 256)
+    max_field = 2_000 if dry else MAX_FIELD
+    models = ["widedeep"] if (dry or quick) else ["deepfm", "dcnv2"]
+    schema = CRITEO.scaled(max_field)
+    ids = _stream(schema, n)
+    results = {}
+
+    # --- sync drain vs async futures intake -------------------------------
+    for model_name in models:
+        policy = TimeoutBatch(BucketedBatch(ladder), max_wait_ms=1.0)
+        _, eng_s = _build(model_name, max_field, policy=policy)
+        eng_s.warmup()
+        dt_s = _sync(eng_s, ids, waves=4 if dry else 10)
+        _, eng_a = _build(model_name, max_field, policy=policy)
+        eng_a.warmup()
+        dt_a = _async(eng_a, ids)
+        ss, sa = eng_s.stats, eng_a.stats
+        emit(f"serving_async/{model_name}/sync", dt_s / n * 1e6,
+             f"req_s={n/dt_s:.0f} p99_ms={ss.p99_ms:.1f} "
+             f"batches={ss.n_batches}")
+        emit(f"serving_async/{model_name}/async", dt_a / n * 1e6,
+             f"req_s={n/dt_a:.0f} p99_ms={sa.p99_ms:.1f} "
+             f"batches={sa.n_batches} worker_drained=True")
+        results[f"{model_name}/speedup"] = dt_s / dt_a
+
+    # --- refresh-without-recompile under zipf traffic ----------------------
+    store = CachedStore(
+        ctr_spec(models[0], "criteo", 16, 256,
+                 max_field=max_field).embedding_spec(),
+        capacity=max(64, max_field // 50))
+    _, eng = _build(models[0], max_field, store=store,
+                    policy=BucketedBatch(ladder),
+                    refresh_every=2)                 # refresh every 2 batches
+    eng.warmup()
+    compiles_before = eng.stats.cache_misses
+    plans_before = set(eng.cached_plans)
+    for wave in np.array_split(ids, 4):
+        eng.submit_many(list(wave))
+        eng.serve_pending()
+    eng.flush()
+    st = eng.stats
+    survived = (eng.stats.cache_misses == compiles_before
+                and set(eng.cached_plans) == plans_before)
+    emit(f"serving_async/{models[0]}/refresh_survival",
+         st.compute_ms_total / max(st.n_batches, 1) * 1e3,
+         f"refreshes={st.emb_cache_refreshes} "
+         f"compiles={st.cache_misses} survived={survived} "
+         f"emb_hit={st.emb_cache_hit_rate:.2f} "
+         f"cached_traffic={st.emb_cached_traffic_fraction:.2f}")
+    results["refresh_survived"] = survived
+
+    # --- two-model runtime through one async intake -------------------------
+    if not dry:
+        rt = ServingRuntime()
+        for m in (models if len(models) > 1 else models + ["dcn"]):
+            spec = ctr_spec(m, "criteo", 16, 256, max_field=max_field)
+            model = CTR_MODELS[m](spec)
+            rt.add_model(m, model, model.init(jax.random.PRNGKey(0)),
+                         policy=TimeoutBatch(BucketedBatch(ladder),
+                                             max_wait_ms=1.0))
+        rt.warmup()
+        rt.start()
+        t0 = time.perf_counter()
+        futs = [rt.submit(rt.models[i % len(rt.models)], row)
+                for i, row in enumerate(ids)]
+        for f in futs:
+            f.result(timeout=300.0)
+        dt = time.perf_counter() - t0
+        rt.stop()
+        agg = rt.stats()
+        emit("serving_async/runtime/2models", dt / n * 1e6,
+             f"req_s={n/dt:.0f} p99_ms={agg.p99_ms:.1f} "
+             f"models={agg.n_models} batches={agg.n_batches}")
+        results["runtime/req_s"] = n / dt
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,20 +1,21 @@
 """repro.core — DPIFrame's contribution as composable JAX modules.
 
-  fused_embedding.py  C2 shim: re-exports the ``repro.embedding`` subsystem
-                      (mega-table spec, Dense/Cached stores, collection)
   opgraph.py          C5: operator DAG + non-GEMM fusion pass
   scheduler.py        C4: breadth-first stream scheduling (Alg. 2)
   dual_parallel.py    C1: the dual-parallel executor (Fig.-8 levels)
   plan.py             compile_plan → InferencePlan, the compiled artifact
                       consumed by repro.serving.InferenceEngine
+
+The C2 embedding path lives in ``repro.embedding`` (re-exported here for
+convenience); ``core/fused_embedding.py`` is a deprecated import shim.
 """
 
 from .dual_parallel import (BRANCH_ORDERS, LEVELS, DualParallelExecutor,
                             ExecutorStats)
 from .plan import InferencePlan, PlanKey, compile_plan
-from .fused_embedding import (CachedStore, DenseStore, EmbeddingStore,
-                              FusedEmbeddingCollection, FusedEmbeddingSpec,
-                              StoreStats, sharded_vocab_lookup)
+from repro.embedding import (CachedStore, DenseStore, EmbeddingStore,
+                             FusedEmbeddingCollection, FusedEmbeddingSpec,
+                             StoreStats, sharded_vocab_lookup)
 from .opgraph import Op, FusedOp, OpGraph, fuse_non_gemm, register_fused_kernel
 from .scheduler import (breadth_first_schedule, depth_first_schedule,
                         full_order)

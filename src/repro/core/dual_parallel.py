@@ -124,28 +124,42 @@ class DualParallelExecutor:
         return self.make_step(graph, order)
 
     def make_step(self, graph: OpGraph, order: list[str], *,
-                  donate: bool = False) -> Callable[[dict[str, Any]], Any]:
-        """Turn a prepared (graph, order) into ``step(inputs_env) -> output``.
+                  donate: bool = False) -> Callable[..., Any]:
+        """Turn a prepared (graph, order) into
+        ``step(inputs_env, runtime_env=None) -> output``.
 
-        Split from :meth:`build` so ``repro.core.plan.compile_plan`` can
-        AOT-lower the returned jit without re-preparing the graph.
+        ``inputs_env`` carries the per-request values (``ids``);
+        ``runtime_env`` carries runtime store tensors (a refreshable
+        embedding tier's cache/backing/index map — see
+        ``EmbeddingStore.runtime_keys``) that change across refreshes but
+        never per request. They are separate arguments so ``donate`` can
+        consume request buffers without ever donating the published store
+        tensors. Split from :meth:`build` so ``repro.core.plan.
+        compile_plan`` can AOT-lower the jit without re-preparing the
+        graph (``step.lower`` is exposed at level "dual").
         """
         ops_in_order = [graph.op(n) for n in order]
         out_edge = ops_in_order[-1].output
 
         if self.level == "dual":
             # one traced program, breadth-first trace order
-            def whole(env):
-                e = graph.execute(env, order)
+            def whole(env, runtime_env):
+                e = graph.execute({**env, **runtime_env}, order)
                 return e[out_edge]
-            return jax.jit(whole, donate_argnums=(0,) if donate else ())
+            jitted_whole = jax.jit(whole,
+                                   donate_argnums=(0,) if donate else ())
+
+            def step(env, runtime_env=None):
+                return jitted_whole(env, runtime_env or {})
+            step.lower = jitted_whole.lower
+            return step
 
         # eager op-by-op dispatch: each op is its own jit call (its own
         # device dispatch), mirroring per-kernel launch overhead
         jitted = [jax.jit(op.fn) for op in ops_in_order]
 
-        def eager(env):
-            env = dict(env)
+        def eager(env, runtime_env=None):
+            env = {**env, **(runtime_env or {})}
             for op, jfn in zip(ops_in_order, jitted):
                 res = jfn(*[env[e] for e in op.inputs])
                 outs = op_outputs(op)

@@ -1,11 +1,20 @@
-"""Compatibility shim — the embedding path now lives in ``repro.embedding``.
+"""DEPRECATED compatibility shim — use ``repro.embedding`` instead.
 
 The mega-table spec, the store tier (``DenseStore``/``CachedStore``), and
 ``FusedEmbeddingCollection`` moved into the :mod:`repro.embedding`
 subsystem when the cache-aware parameter-server refactor landed. This
-module keeps the historical import path
-(``repro.core.fused_embedding`` / ``repro.core``) working.
+module keeps the historical import path ``repro.core.fused_embedding``
+working (with a ``DeprecationWarning``); nothing in-repo imports it
+anymore — ``repro.core`` re-exports straight from ``repro.embedding``.
 """
+
+import warnings
+
+warnings.warn(
+    "repro.core.fused_embedding is deprecated; import from repro.embedding "
+    "instead (same names: FusedEmbeddingSpec, FusedEmbeddingCollection, "
+    "EmbeddingStore, DenseStore, CachedStore, StoreStats, "
+    "sharded_vocab_lookup).", DeprecationWarning, stacklevel=2)
 
 from repro.embedding import (CachedStore, DenseStore, EmbeddingStore,
                              FusedEmbeddingCollection, FusedEmbeddingSpec,

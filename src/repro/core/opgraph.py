@@ -93,6 +93,15 @@ class OpGraph:
         self._producers: dict[str, str] = {}   # value edge -> op name
 
     # -- construction ------------------------------------------------------
+    def add_input(self, name: str) -> None:
+        """Declare an extra graph input edge (e.g. a runtime store tensor
+        a refreshable embedding tier feeds per call instead of baking)."""
+        if name in self._producers:
+            raise ValueError(f"value {name!r} already produced by "
+                             f"{self._producers[name]!r}")
+        if name not in self.graph_inputs:
+            self.graph_inputs = self.graph_inputs + (name,)
+
     def add(self, op: Op | FusedOp) -> None:
         for out in op_outputs(op):
             if out in self._producers:

@@ -13,7 +13,10 @@ same decomposition):
      their deliberate op-by-op dispatch but have every per-op jit warmed.
   2. **plan** — the ``InferencePlan`` is immutable and batch-shape-specific;
      it can be cached, shipped across engines, and called directly
-     (``plan(ids) -> logits``, ``plan.predict(ids) -> scores``).
+     (``plan(ids) -> logits``, ``plan.predict(ids) -> scores``). A
+     refreshable embedding store's tensors are *runtime inputs* of the
+     step (``runtime_inputs``), not baked constants, so plans survive
+     cache refreshes unchanged.
   3. **engine** — ``repro.serving.engine.InferenceEngine`` owns a cache of
      plans keyed by ``(model, level, batch_bucket)`` plus a pluggable
      batching policy (``repro.serving.batching``).
@@ -81,7 +84,13 @@ class InferencePlan:
 
     ``step`` maps ``ids (batch_size, n_fields) int32 -> logits``; it is the
     AOT-compiled executable at level "dual" and the warmed eager chain at
-    the other levels. Plans are immutable: recompile to change anything.
+    the other levels. Plans are immutable: recompile to change anything —
+    with one deliberate exception: ``runtime_inputs`` names the embedding
+    store tensors (a refreshable tier's cache/backing/index map) that the
+    step takes as *per-call arguments* instead of baked constants. Their
+    values come from the ``runtime_provider`` the plan was compiled with,
+    so swapping the published tensors (a cache refresh) retargets every
+    call without touching the compiled program.
     """
     key: PlanKey
     stats: ExecutorStats
@@ -91,6 +100,7 @@ class InferencePlan:
     n_fields: int
     donate: bool
     compile_ms: float
+    runtime_inputs: tuple[str, ...] = ()
 
     @property
     def level(self) -> str:
@@ -156,7 +166,9 @@ def compile_plan(model, params: Any, level: str = "dual",
                  mesh: jax.sharding.Mesh | None = None,
                  donate: bool = False,
                  branch_order: str = "longer_first",
-                 model_axis: str = "model") -> InferencePlan:
+                 model_axis: str = "model",
+                 runtime_provider: Callable[[], dict] | None = None
+                 ) -> InferencePlan:
     """Compile one (model, level, batch shape) into an InferencePlan.
 
     Args:
@@ -170,8 +182,16 @@ def compile_plan(model, params: Any, level: str = "dual",
         donate: donate the input buffer to the compiled step (XLA may
             reuse it; callers must treat submitted arrays as consumed).
             Only meaningful at level ``"dual"`` — the eager levels dispatch
-            op-by-op and ignore it.
+            op-by-op and ignore it. Runtime store tensors are never
+            donated (they are shared across calls and plans).
         branch_order: breadth-first head-branch policy (§V-H ablations).
+        runtime_provider: zero-arg callable returning the current runtime
+            store tensors (edge name -> array, the plan's
+            ``runtime_inputs``), consulted on *every* step call. Default:
+            bind the tensors in ``params`` at compile time — equivalent to
+            the old baked-constant behavior. ``InferenceEngine`` passes a
+            provider reading its live params so a ``refresh_cache()``
+            tensor swap retargets every cached plan with zero recompiles.
     """
     if level not in LEVELS:
         raise ValueError(f"level must be one of {LEVELS}, got {level!r}")
@@ -190,19 +210,28 @@ def compile_plan(model, params: Any, level: str = "dual",
     step_env = executor.make_step(graph, order, donate=donate)
     n_fields = model.spec.k
 
+    # runtime store tensors (refreshable tiers only): extra step inputs,
+    # re-read from the provider each call instead of baked into the program
+    runtime = (model.store_runtime_env(params)
+               if hasattr(model, "store_runtime_env") else {})
+    provider = runtime_provider if runtime_provider is not None \
+        else (lambda: runtime)
+
     if level == "dual":
         # AOT: lower + compile the whole-graph program now, not on first use
         spec = {"ids": jax.ShapeDtypeStruct((batch_size, n_fields),
                                             jnp.int32)}
-        compiled = step_env.lower(spec).compile()
+        rt_spec = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+                   for k, v in runtime.items()}
+        compiled = step_env.lower(spec, rt_spec).compile()
 
         def step(ids: jax.Array) -> jax.Array:
-            return compiled({"ids": ids})
+            return compiled({"ids": ids}, provider())
     else:
         # eager levels dispatch op-by-op on purpose; warm every per-op jit
         # so serving latency never includes compiles
         def step(ids: jax.Array) -> jax.Array:
-            return step_env({"ids": ids})
+            return step_env({"ids": ids}, provider())
         jax.block_until_ready(
             step(jnp.zeros((batch_size, n_fields), dtype=jnp.int32)))
     compile_ms = (time.perf_counter() - t0) * 1e3
@@ -213,4 +242,5 @@ def compile_plan(model, params: Any, level: str = "dual",
     stats.embedding_store = _store_describe(model)
     return InferencePlan(key=key, stats=stats, graph=graph,
                          order=tuple(order), step=step, n_fields=n_fields,
-                         donate=donate, compile_ms=compile_ms)
+                         donate=donate, compile_ms=compile_ms,
+                         runtime_inputs=tuple(sorted(runtime)))

@@ -12,7 +12,7 @@ place parameters via ``partition_spec()``, engines feed traffic back via
 """
 
 from .spec import FusedEmbeddingSpec
-from .store import DenseStore, EmbeddingStore, StoreStats
+from .store import DenseStore, EmbeddingStore, StoreStats, runtime_edge
 from .cached import CachedStore
 from .collection import FusedEmbeddingCollection, sharded_vocab_lookup
 
@@ -24,4 +24,5 @@ __all__ = [
     "StoreStats",
     "FusedEmbeddingCollection",
     "sharded_vocab_lookup",
+    "runtime_edge",
 ]

@@ -46,12 +46,17 @@ class CachedStore(EmbeddingStore):
 
     The store keeps a host-side mirror of the index map plus per-row
     traffic counts; ``refresh`` is the only operation that changes cache
-    contents, and it returns a *new* param subtree (callers holding
-    compiled plans must recompile — ``InferenceEngine.refresh_cache``
-    does both and counts it).
+    contents, and it returns a *new* param subtree — a double buffer:
+    the fresh cache/index tensors are built on the side while readers
+    keep serving from the old ones, then the caller publishes the new
+    subtree in one reference swap (``InferenceEngine.refresh_cache``).
+    Because all three tensors are ``runtime_keys``, compiled plans take
+    them as per-call inputs and survive the swap untouched — a refresh
+    costs two device uploads, never a recompile.
     """
 
     refreshable = True
+    runtime_keys = ("cache", "backing", "slot_of_row")
 
     def __init__(self, spec: FusedEmbeddingSpec, capacity: int):
         super().__init__(spec)

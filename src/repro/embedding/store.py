@@ -16,7 +16,7 @@ the zipf skew of real CTR traffic. This module is that tier for the repro:
 
 ``FusedEmbeddingCollection`` delegates all lookups and parameter handling
 to its store, so the whole stack — ``kernels/ops.py`` →
-``core/fused_embedding.py`` → ``core/plan.py`` → ``serving/engine.py`` —
+``embedding/collection.py`` → ``core/plan.py`` → ``serving/engine.py`` —
 is store-agnostic.
 """
 
@@ -33,7 +33,20 @@ from repro.kernels import ops as kops
 
 from .spec import FusedEmbeddingSpec
 
-__all__ = ["StoreStats", "EmbeddingStore", "DenseStore"]
+__all__ = ["StoreStats", "EmbeddingStore", "DenseStore", "runtime_edge"]
+
+
+def runtime_edge(prefix: str, leaf: str) -> str:
+    """Graph-input edge name of one runtime store tensor.
+
+    Refreshable stores expose their tensors (cache/backing/index map) as
+    *runtime inputs* of compiled plans instead of baked constants, so a
+    cache refresh is a tensor swap rather than a recompile. Everything
+    that names those edges — model graph emission, ``compile_plan``'s AOT
+    input spec, the engine's per-call bindings — goes through this one
+    function so the convention can never drift.
+    """
+    return f"{prefix}:{leaf}"
 
 
 @dataclasses.dataclass
@@ -70,9 +83,13 @@ class EmbeddingStore:
 
     spec: FusedEmbeddingSpec
     #: True when the store keeps a rebuildable cache tier — engines only
-    #: run the observe/refresh loop (and drop compiled plans on refresh)
-    #: for refreshable stores.
+    #: run the observe/refresh loop for refreshable stores.
     refreshable: bool = False
+    #: Param-subtree leaves that compiled plans must take as *runtime
+    #: inputs* (per-call arguments) rather than bake as constants, so a
+    #: ``refresh`` can swap them without invalidating any compiled plan.
+    #: Empty for stores that never refresh (their tensors may be baked).
+    runtime_keys: tuple = ()
 
     def __init__(self, spec: FusedEmbeddingSpec):
         self.spec = spec

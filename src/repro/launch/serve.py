@@ -1,11 +1,16 @@
-"""Serving driver: CTR engine or LM generation, reduced-config CPU-runnable.
+"""Serving driver: CTR runtime/engine or LM generation, CPU-runnable.
 
     PYTHONPATH=src python -m repro.launch.serve --mode ctr --model dcnv2
     PYTHONPATH=src python -m repro.launch.serve --mode ctr --policy bucketed
+    PYTHONPATH=src python -m repro.launch.serve --models deepfm,dcnv2 --async
     PYTHONPATH=src python -m repro.launch.serve --mode lm --arch llama3-8b
 
-The CTR path is the compile→plan→engine flow: an ``InferenceEngine`` owning
-a plan cache and a batching policy picked by ``--policy``.
+The CTR path is the compile→plan→engine→runtime flow: a ``ServingRuntime``
+hosting one ``InferenceEngine`` (plan cache + batching policy picked by
+``--policy``) per ``--models`` entry. With ``--async`` each engine's
+background worker drains its queue (futures-based intake — the
+``TimeoutBatch`` SLO fires without caller polling); without it the driver
+drains synchronously per wave.
 """
 
 import argparse
@@ -26,44 +31,83 @@ def _make_policy(args):
     return TimeoutBatch(BucketedBatch(ladder), max_wait_ms=args.max_wait_ms)
 
 
-def serve_ctr(args) -> None:
-    from repro.data.synthetic import CRITEO, zipf_ids
-    from repro.models.ctr import CTR_MODELS
-    from repro.serving import InferenceEngine
-    schema = CRITEO.scaled(100_000)
-    spec = ctr_spec(args.model, "criteo", 16, 256, max_field=100_000)
-    model = CTR_MODELS[args.model](spec)
-    params = model.init(jax.random.PRNGKey(0))
-    store = None
-    if args.store == "cached":
-        from repro.embedding import CachedStore
-        store = CachedStore(spec.embedding_spec(),
-                            capacity=args.cache_capacity)
-    eng = InferenceEngine(model, params, level=args.level,
-                          policy=_make_policy(args), store=store,
-                          refresh_every=args.refresh_every)
-    eng.warmup()
+def _traffic(args, schema):
+    from repro.data.synthetic import zipf_ids
     if args.zipf:
-        ids = np.asarray(zipf_ids(jax.random.PRNGKey(0), args.requests,
-                                  schema.field_sizes, exponent=args.zipf))
-        eng.submit_many(list(ids))
-    else:
-        rng = np.random.default_rng(0)
-        for _ in range(args.requests):
-            eng.submit(np.array([rng.integers(0, s)
-                                 for s in schema.field_sizes],
-                                dtype=np.int32))
-    scores = np.concatenate([eng.serve_pending(), eng.flush()])
+        return np.asarray(zipf_ids(jax.random.PRNGKey(0), args.requests,
+                                   schema.field_sizes, exponent=args.zipf))
+    rng = np.random.default_rng(0)
+    return np.stack([np.array([rng.integers(0, s)
+                               for s in schema.field_sizes], dtype=np.int32)
+                     for _ in range(args.requests)])
+
+
+def _engine_line(name, eng, scores, store, use_async):
     s = eng.stats
     emb = (f"  emb_hit={s.emb_cache_hit_rate:.1%} "
            f"cached_traffic={s.emb_cached_traffic_fraction:.1%} "
            f"refreshes={s.emb_cache_refreshes}" if store else "")
-    print(f"[serve] {args.model} level={args.level} policy={args.policy}: "
-          f"{s.n_requests} requests in {s.n_batches} batches  "
-          f"p50={s.p50_ms:.1f}ms p99={s.p99_ms:.1f}ms  "
-          f"plans={len(eng.cached_plans)} cache_h/m="
-          f"{s.cache_hits}/{s.cache_misses} pad_waste={s.padding_waste:.1%} "
+    mode = "async" if use_async else "sync"
+    print(f"[serve:{mode}] {name}: {s.n_requests} requests in "
+          f"{s.n_batches} batches  p50={s.p50_ms:.1f}ms "
+          f"p99={s.p99_ms:.1f}ms  plans={len(eng.cached_plans)} "
+          f"cache_h/m={s.cache_hits}/{s.cache_misses} "
+          f"pad_waste={s.padding_waste:.1%} "
           f"mean_score={scores.mean():.4f}{emb}")
+
+
+def serve_ctr(args) -> None:
+    from repro.data.synthetic import CRITEO
+    from repro.models.ctr import CTR_MODELS
+    from repro.serving import ServingRuntime
+    names = [n.strip() for n in
+             (args.models.split(",") if args.models else [args.model])]
+    schema = CRITEO.scaled(100_000)
+    rt = ServingRuntime(refresh_every=args.runtime_refresh_every)
+    for name in names:
+        spec = ctr_spec(name, "criteo", 16, 256, max_field=100_000)
+        model = CTR_MODELS[name](spec)
+        params = model.init(jax.random.PRNGKey(0))
+        store = None
+        if args.store == "cached":
+            from repro.embedding import CachedStore
+            store = CachedStore(spec.embedding_spec(),
+                                capacity=args.cache_capacity)
+        rt.add_model(name, model, params, level=args.level,
+                     policy=_make_policy(args), store=store,
+                     refresh_every=args.refresh_every)
+    rt.warmup()
+    ids = _traffic(args, schema)
+
+    if args.use_async:
+        # futures-based intake: round-robin the stream over the hosted
+        # models, let each engine's worker drain its own queue
+        rt.start()
+        futs = {n: [] for n in names}
+        for i, row in enumerate(ids):
+            name = names[i % len(names)]
+            futs[name].append(rt.submit(name, row))
+        scores = {n: np.array([f.result(timeout=120.0) for f in fs])
+                  for n, fs in futs.items()}
+        rt.stop()
+    else:
+        scores = {}
+        for j, name in enumerate(names):
+            eng = rt.engine(name)
+            # submit through the runtime so the shared admission cadence
+            # (--runtime-refresh-every) sees the traffic
+            rt.submit_many(name, list(ids[j::len(names)]))
+            scores[name] = np.concatenate([eng.serve_pending(), eng.flush()])
+
+    for name in names:
+        _engine_line(name, rt.engine(name), scores[name],
+                     args.store == "cached", args.use_async)
+    if len(names) > 1:
+        agg = rt.stats()
+        print(f"[serve:runtime] {agg.n_models} models  "
+              f"{agg.n_requests} requests in {agg.n_batches} batches  "
+              f"p50={agg.p50_ms:.1f}ms p99={agg.p99_ms:.1f}ms  "
+              f"refreshes={agg.emb_cache_refreshes}")
 
 
 def serve_lm(args) -> None:
@@ -83,6 +127,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", choices=["ctr", "lm"], default="ctr")
     ap.add_argument("--model", default="dcnv2")
+    ap.add_argument("--models", default=None,
+                    help="comma-separated model list for the multi-model "
+                         "runtime (overrides --model), e.g. deepfm,dcnv2")
+    ap.add_argument("--async", dest="use_async", action="store_true",
+                    help="futures-based intake drained by background "
+                         "workers instead of caller-driven serve_pending")
     ap.add_argument("--arch", default="llama3-8b", choices=list(ARCH_NAMES))
     ap.add_argument("--batch", type=int, default=64)
     ap.add_argument("--level", default="dual",
@@ -98,7 +148,11 @@ def main() -> None:
     ap.add_argument("--cache-capacity", type=int, default=65536,
                     help="hot-row capacity C for --store cached")
     ap.add_argument("--refresh-every", type=int, default=None,
-                    help="rebuild the hot cache every N served batches")
+                    help="per-engine: rebuild the hot cache every N served "
+                         "batches (plan cache survives — tensor swap)")
+    ap.add_argument("--runtime-refresh-every", type=int, default=None,
+                    help="runtime-wide: refresh all stores every N "
+                         "submitted requests across models")
     ap.add_argument("--zipf", type=float, default=None,
                     help="zipf exponent for request traffic (default: "
                          "uniform random ids)")

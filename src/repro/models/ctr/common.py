@@ -26,6 +26,7 @@ import jax.numpy as jnp
 
 from repro.core import FusedEmbeddingCollection, FusedEmbeddingSpec, Op, OpGraph
 from repro.core.opgraph import register_fused_kernel
+from repro.embedding import runtime_edge
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 
@@ -89,6 +90,13 @@ def emit_embedding_ops(g: OpGraph, emb: FusedEmbeddingCollection,
     ``naive`` = k serial gathers + concat off the store's dense view (the
     baseline the paper measures against); otherwise ONE fused lookup
     through whatever tiers the store keeps (mega-table or cache+backing).
+
+    Refreshable stores declare ``runtime_keys``: those leaves become extra
+    *graph inputs* (edge names from :func:`repro.embedding.runtime_edge`)
+    instead of closed-over constants, so a compiled plan keeps working
+    across cache refreshes — the caller feeds the current tensors per
+    step (``compile_plan`` wires this; ``CTRModel.graph_env`` builds the
+    matching env for the eager/training path).
     """
     store_params = params[prefix]
     if level == "naive":
@@ -103,6 +111,19 @@ def emit_embedding_ops(g: OpGraph, emb: FusedEmbeddingCollection,
         g.add(Op(f"{prefix}_concat",
                  lambda *cols: jnp.concatenate(cols, axis=1),
                  tuple(f"{prefix}_f{i}" for i in range(k)),
+                 out, module="embedding"))
+        return
+    rt = tuple(emb.store.runtime_keys)
+    if rt:
+        static = {k_: v for k_, v in store_params.items() if k_ not in rt}
+        edges = tuple(runtime_edge(prefix, leaf) for leaf in rt)
+        for e in edges:
+            g.add_input(e)
+
+        def fused_runtime(ids, *leaves):
+            return emb.apply({**static, **dict(zip(rt, leaves))}, ids)
+
+        g.add(Op(f"{prefix}_fused", fused_runtime, ("ids",) + edges,
                  out, module="embedding"))
     else:
         g.add(Op(f"{prefix}_fused",
@@ -223,6 +244,24 @@ class CTRModel:
                 specs[key] = coll.partition_spec(model_axis)
         return specs
 
+    def store_runtime_env(self, params: dict) -> dict:
+        """Edge name -> tensor for every runtime store input this model's
+        graphs declare (see ``emit_embedding_ops``): the leaves refreshable
+        stores swap at refresh time. Empty for all-dense models."""
+        env = {}
+        for key, coll in self.embedding_collections().items():
+            sub = params.get(key)
+            if sub is None:
+                continue
+            for leaf in coll.store.runtime_keys:
+                env[runtime_edge(key, leaf)] = sub[leaf]
+        return env
+
+    def graph_env(self, params: dict, ids: jax.Array) -> dict:
+        """The full input env for executing a graph built at a fused level:
+        ``ids`` plus the current runtime store tensors."""
+        return {"ids": ids, **self.store_runtime_env(params)}
+
     def use_store(self, store, params: dict) -> dict:
         """Swap the main table's store, converting its param subtree (at
         ``main_embedding_key``) into the new layout (bit-exact — see
@@ -252,7 +291,7 @@ class CTRModel:
         compiled, batch-shaped artifacts instead of re-executing the graph
         eagerly per call."""
         g = self.build_graph(params, "dual")
-        env = g.execute({"ids": ids})
+        env = g.execute(self.graph_env(params, ids))
         return env["logit"]
 
     def predict_proba(self, params: dict, ids: jax.Array) -> jax.Array:

@@ -1,17 +1,25 @@
-"""Serving substrate: plan-cached batched CTR engine + LM generation.
+"""Serving substrate: plan-cached batched CTR engine + async runtime + LM
+generation.
 
 CTR flow:  ``compile_plan`` (repro.core.plan) → ``InferencePlan`` →
-``InferenceEngine`` (plan cache + pluggable batching policy).
+``InferenceEngine`` (plan cache + pluggable batching policy + futures-based
+async intake) → ``ServingRuntime`` (multi-model router, one worker per
+engine, shared admission cadence).
 """
 
 from .batching import (BatchDecision, BatchPolicy, BucketedBatch, FixedBatch,
                        TimeoutBatch)
-from .engine import CTRServingEngine, EngineStats, InferenceEngine, ServeStats
+from .engine import (CTRServingEngine, EngineStats, InferenceEngine,
+                     RequestFuture, ServeStats)
+from .runtime import RuntimeStats, ServingRuntime
 from .generate import generate
 
 __all__ = [
     "InferenceEngine",
     "EngineStats",
+    "RequestFuture",
+    "ServingRuntime",
+    "RuntimeStats",
     "BatchPolicy",
     "BatchDecision",
     "FixedBatch",

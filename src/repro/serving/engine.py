@@ -4,7 +4,8 @@ The deployment story (paper Fig. 7) as three layers:
 
     plan  = compile_plan(model, params, "dual", 256)   # repro.core.plan
     eng   = InferenceEngine(model, params, policy=BucketedBatch())
-    eng.submit(row); scores = eng.serve_pending()      # or eng.predict(ids)
+    fut   = eng.submit(row); fut.result()              # async intake
+    eng.submit(row); scores = eng.serve_pending()      # or sync drain
 
 The engine owns
 
@@ -13,15 +14,26 @@ The engine owns
   (hit/miss counts are in ``stats``);
 * a **batching policy** (``repro.serving.batching``) deciding how queued
   single-sample requests group into padded device batches;
+* a **request queue of futures**: ``submit`` returns a
+  :class:`RequestFuture` that resolves (score + latency) when its batch is
+  served — either by a caller-driven drain (``serve_pending``/``flush``)
+  or by the **background worker thread** (``start()``/``stop()``), which
+  drains the queue through the policy on its own so latency-SLO policies
+  like ``TimeoutBatch`` fire without any caller polling (PCDF's
+  full-link-asynchronous serving loop);
 * **latency accounting** separating queueing from compute (bounded rolling
-  p50/p99 window — see ``EngineStats``), plus per-bucket compile counts and
+  p50/p99 window — see ``EngineStats``; all counters behind one lock so
+  the worker and callers never race), plus per-bucket compile counts and
   padding-waste fractions so benchmarks can quantify the bucketing win;
 * an optional **embedding store** tier (``store=CachedStore(...)``): the
-  engine feeds served id traffic to the store's admission counters,
+  engine feeds served id traffic to the store's admission counters and
   rebuilds the hot-row cache on ``refresh_cache()`` (or every
-  ``refresh_every`` batches), and surfaces hit-rate / cached-traffic /
-  refresh counters in ``stats`` — the HugeCTR inference-parameter-server
-  loop over DPIFrame plans.
+  ``refresh_every`` batches). The store's tensors are *runtime inputs* of
+  every compiled plan (``EmbeddingStore.runtime_keys``), so a refresh is
+  a double-buffered tensor swap — build the new cache tensors on the
+  side, publish them in one atomic reference swap — and the entire plan
+  cache survives with zero recompiles (HugeCTR's online cache refresh
+  over DPIFrame plans).
 
 ``CTRServingEngine`` (the old fixed-batch surface) remains as a deprecated
 shim: ``InferenceEngine`` with ``FixedBatch(batch_size)``.
@@ -31,10 +43,11 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import threading
 import time
 import warnings
 from collections import deque
-from typing import Sequence
+from typing import Callable, Sequence
 
 import numpy as np
 import jax
@@ -42,14 +55,89 @@ import jax
 from repro.core.plan import InferencePlan, PlanKey, compile_plan, plan_key_for
 from .batching import BatchPolicy, BucketedBatch, FixedBatch
 
-__all__ = ["InferenceEngine", "EngineStats", "CTRServingEngine",
-           "ServeStats"]
+__all__ = ["InferenceEngine", "EngineStats", "RequestFuture",
+           "CTRServingEngine", "ServeStats"]
+
+
+class RequestFuture:
+    """Resolution handle for one submitted request.
+
+    Resolves to the request's sigmoid score; ``latency_ms`` (submit →
+    resolution, the same sample fed to the engine's rolling window) is set
+    at resolution time. Futures resolve in submit order — within a batch
+    and across batches — because a single drain loop serves the queue
+    FIFO. Done-callbacks run on the resolving thread (the worker, for an
+    engine with ``start()`` called).
+    """
+
+    __slots__ = ("_event", "_lock", "_score", "_exc", "_callbacks",
+                 "t_submit", "latency_ms")
+
+    def __init__(self):
+        self._event = threading.Event()
+        self._lock = threading.Lock()   # guards _callbacks vs resolution
+        self._score: float | None = None
+        self._exc: BaseException | None = None
+        self._callbacks: list[Callable[[RequestFuture], None]] = []
+        self.t_submit = time.perf_counter()
+        self.latency_ms: float | None = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: float | None = None) -> float:
+        """Block until resolved; returns the score (or re-raises the
+        serving error that failed this request's batch)."""
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"request not served within {timeout}s")
+        if self._exc is not None:
+            raise self._exc
+        return self._score
+
+    def add_done_callback(self, fn: Callable[[RequestFuture], None]) -> None:
+        """Run ``fn(self)`` on resolution (immediately if already done).
+        Callback exceptions are swallowed (stdlib-Future semantics): one
+        bad callback must never block other requests from resolving."""
+        with self._lock:
+            if not self._event.is_set():
+                self._callbacks.append(fn)
+                return
+        self._run_callback(fn)
+
+    def _run_callback(self, fn) -> None:
+        try:
+            fn(self)
+        except Exception:
+            pass
+
+    def _finish(self) -> None:
+        with self._lock:
+            self._event.set()
+            cbs, self._callbacks = self._callbacks, []
+        for fn in cbs:
+            self._run_callback(fn)
+
+    def _resolve(self, score: float, latency_ms: float) -> None:
+        self._score = score
+        self.latency_ms = latency_ms
+        self._finish()
+
+    def _fail(self, exc: BaseException) -> None:
+        self._exc = exc
+        self._finish()
 
 
 @dataclasses.dataclass
 class EngineStats:
-    """Serving counters: request/batch totals, latency split, plan-cache
-    behaviour, padding waste per bucket, and embedding-store cache health.
+    """Serving counters: request/batch totals, queue depth, latency split,
+    plan-cache behaviour, padding waste per bucket, and embedding-store
+    cache health.
+
+    **Thread safety**: every mutation (and every compound read) happens
+    under ``lock`` — one re-entrant lock covering the counters *and* the
+    rolling latency window, so the background worker, sync drains, and
+    stat readers never interleave mid-update. ``p50_ms``/``p99_ms``
+    snapshot the window under the lock.
 
     Latency accounting is a **bounded rolling window**: ``latency_ms``
     keeps only the most recent ``latency_window`` per-request samples
@@ -58,6 +146,9 @@ class EngineStats:
     last ``latency_window`` served requests, not engine lifetime — which
     is what an SLO monitor wants anyway; lifetime totals remain exact in
     ``n_requests``/``compute_ms_total``.
+
+    ``queue_depth`` is the number of submitted-but-unserved requests at
+    the last queue transition (kept current by the engine).
 
     The ``emb_*`` counters mirror the engine's embedding store
     (``CachedStore``): row-lookup hits/misses against the current index
@@ -68,6 +159,7 @@ class EngineStats:
     """
     n_requests: int = 0
     n_batches: int = 0
+    queue_depth: int = 0
     compute_ms_total: float = 0.0
     latency_window: int = 8192
     latency_ms: deque = None
@@ -84,26 +176,33 @@ class EngineStats:
     def __post_init__(self):
         self.latency_ms = deque(self.latency_ms or (),
                                 maxlen=self.latency_window)
+        self.lock = threading.RLock()
 
     @property
     def p50_ms(self) -> float:
-        return float(np.percentile(self.latency_ms, 50)) if self.latency_ms else 0.0
+        with self.lock:
+            samples = list(self.latency_ms)
+        return float(np.percentile(samples, 50)) if samples else 0.0
 
     @property
     def p99_ms(self) -> float:
-        return float(np.percentile(self.latency_ms, 99)) if self.latency_ms else 0.0
+        with self.lock:
+            samples = list(self.latency_ms)
+        return float(np.percentile(samples, 99)) if samples else 0.0
 
     @property
     def padding_waste(self) -> float:
         """Fraction of served device rows that were padding."""
-        rows = self.n_requests + self.padded_rows_total
-        return self.padded_rows_total / rows if rows else 0.0
+        with self.lock:
+            rows = self.n_requests + self.padded_rows_total
+            return self.padded_rows_total / rows if rows else 0.0
 
     @property
     def emb_cache_hit_rate(self) -> float:
         """Row-lookup hit rate of the embedding store's hot cache."""
-        n = self.emb_cache_hits + self.emb_cache_misses
-        return self.emb_cache_hits / n if n else 0.0
+        with self.lock:
+            n = self.emb_cache_hits + self.emb_cache_misses
+            return self.emb_cache_hits / n if n else 0.0
 
 
 # deprecated alias — the old engine exported its stats under this name
@@ -121,21 +220,29 @@ class InferenceEngine:
         branch_order: breadth-first head-branch choice (§V-H).
         mesh: optional device mesh — plans shard the embedding tables
             row-wise over its model axis (placement delegated to the
-            model/store ``partition_spec``).
+            model/store ``partition_spec``). Note: combining ``mesh`` with
+            a refreshable store currently republishes unplaced tensors at
+            refresh time — fine on a single-device mesh, not yet wired for
+            true multi-chip refresh.
         donate: donate input buffers to the compiled steps (level "dual"
-            only; the eager levels ignore it).
+            only; the eager levels ignore it). Runtime store tensors are
+            never donated.
         store: optional ``repro.embedding`` store (e.g. ``CachedStore``)
             to retrofit onto the model's main embedding table; ``params``
             are converted bit-exactly into the store's layout. The engine
             feeds every served id batch back to the store's admission
             counters and exposes hit-rate/refresh counters in ``stats``.
         refresh_every: rebuild the store's hot cache every N served
-            batches (HugeCTR-style refresh interval). Each refresh
-            invalidates this engine's compiled plans (they bake the old
-            cache contents), so pick N large enough to amortize the
-            recompiles. ``None`` = manual ``refresh_cache()`` only.
+            batches (HugeCTR-style refresh interval). A refresh is a
+            double-buffered tensor swap — compiled plans take the store
+            tensors as runtime inputs and survive untouched — so N trades
+            admission freshness against host-side rebuild work only.
+            ``None`` = manual ``refresh_cache()`` only.
         latency_window: size of the rolling latency window behind
             ``stats.p50_ms``/``p99_ms`` (see ``EngineStats``).
+        worker_tick_ms: how long the background worker sleeps between
+            drain attempts while the policy is holding requests back
+            (e.g. a ``TimeoutBatch`` SLO window still open).
     """
 
     def __init__(self, model, params, *, level: str = "dual",
@@ -145,7 +252,8 @@ class InferenceEngine:
                  donate: bool = False,
                  store=None,
                  refresh_every: int | None = None,
-                 latency_window: int = 8192):
+                 latency_window: int = 8192,
+                 worker_tick_ms: float = 0.5):
         self.model = model
         if store is not None:
             params = model.use_store(store, params)
@@ -156,8 +264,19 @@ class InferenceEngine:
         self.mesh = mesh
         self.donate = donate
         self.refresh_every = refresh_every
+        self.worker_tick_ms = worker_tick_ms
         self._plans: dict[PlanKey, InferencePlan] = {}
         self._queue: deque = deque()
+        # lock order (never reversed): _drain_lock -> _cv -> stats.lock.
+        # _drain_lock serializes everything that touches host-side store
+        # state (drains/observe/refresh) and is re-entrant so an
+        # auto-refresh inside a drain doesn't self-deadlock.
+        self._cv = threading.Condition(threading.Lock())
+        self._drain_lock = threading.RLock()
+        self._compile_lock = threading.Lock()
+        self._worker: threading.Thread | None = None
+        self._running = False
+        self.worker_error: BaseException | None = None
         self.stats = EngineStats(latency_window=latency_window)
 
     # -- embedding store -----------------------------------------------------
@@ -166,6 +285,15 @@ class InferenceEngine:
         """The model's main embedding store (DenseStore unless swapped)."""
         coll = getattr(self.model, "embedding", None)
         return getattr(coll, "store", None)
+
+    def _runtime_env(self) -> dict:
+        """Current runtime store tensors for compiled plans — re-read on
+        every step call, so one atomic ``self.params`` swap (a refresh)
+        retargets every cached plan. Same duck-typing guard as
+        ``compile_plan``: models without the store surface have none."""
+        if hasattr(self.model, "store_runtime_env"):
+            return self.model.store_runtime_env(self.params)
+        return {}
 
     def _observe_traffic(self, rows: np.ndarray) -> None:
         """Feed served ids to the store's admission counters and mirror
@@ -177,24 +305,38 @@ class InferenceEngine:
             return
         coll.observe(rows)
         st, ss = self.stats, coll.store.stats
-        st.emb_cache_hits = ss.hits
-        st.emb_cache_misses = ss.misses
-        st.emb_cache_refreshes = ss.refreshes
+        with st.lock:
+            st.emb_cache_hits = ss.hits
+            st.emb_cache_misses = ss.misses
+            st.emb_cache_refreshes = ss.refreshes
 
     def refresh_cache(self) -> None:
-        """Re-admit hot rows from observed traffic into the store's cache
-        and drop every compiled plan (their steps captured the old cache
-        tensors). The next batch per bucket recompiles — the cost
-        ``refresh_every`` amortizes. No-op for cacheless stores."""
+        """Re-admit hot rows from observed traffic into the store's cache.
+
+        Double-buffered refresh: the store builds the new cache tensors on
+        the side (``store.refresh`` returns a fresh param subtree) while
+        in-flight batches keep reading the old ones, then the engine
+        publishes the new tree in one atomic reference swap. Every
+        compiled plan takes the store tensors as runtime inputs
+        (``InferencePlan.runtime_inputs``), so the **plan cache survives
+        intact — a refresh never recompiles**. No-op for cacheless
+        stores.
+        """
         store = self.store
         if store is None or not store.refreshable:
             return
-        key = getattr(self.model, "main_embedding_key", "emb")
-        self.params = {**self.params,
-                       key: store.refresh(self.params[key])}
-        self._plans.clear()
-        self.stats.emb_cache_refreshes = store.stats.refreshes
-        self.stats.emb_cached_traffic_fraction = store.cached_traffic_fraction
+        # _drain_lock keeps the store's host-side admission state (counts,
+        # index map, hit/miss stats) from being rebuilt mid-observe when a
+        # refresh comes from outside the drain loop (ServingRuntime's
+        # shared admission, a manual call); re-entrant for auto-refresh
+        with self._drain_lock:
+            key = getattr(self.model, "main_embedding_key", "emb")
+            fresh = store.refresh(self.params[key])   # built on the side
+            self.params = {**self.params, key: fresh}  # atomic publish
+            with self.stats.lock:
+                self.stats.emb_cache_refreshes = store.stats.refreshes
+                self.stats.emb_cached_traffic_fraction = \
+                    store.cached_traffic_fraction
 
     def _maybe_auto_refresh(self) -> None:
         if (self.refresh_every
@@ -209,16 +351,21 @@ class InferenceEngine:
     def plan_for(self, bucket: int) -> InferencePlan:
         """Fetch (or compile-and-cache) the plan for one batch bucket."""
         key = self._plan_key(bucket)
-        plan = self._plans.get(key)
-        if plan is not None:
-            self.stats.cache_hits += 1
-            return plan
-        self.stats.cache_misses += 1
-        plan = compile_plan(self.model, self.params, self.level, bucket,
-                            mesh=self.mesh, donate=self.donate,
-                            branch_order=self.branch_order)
-        self._plans[key] = plan
-        self.stats.compile_ms_per_bucket[int(bucket)] = plan.compile_ms
+        with self._compile_lock:
+            plan = self._plans.get(key)
+            if plan is not None:
+                with self.stats.lock:
+                    self.stats.cache_hits += 1
+                return plan
+            plan = compile_plan(self.model, self.params, self.level, bucket,
+                                mesh=self.mesh, donate=self.donate,
+                                branch_order=self.branch_order,
+                                runtime_provider=self._runtime_env)
+            self._plans[key] = plan
+            with self.stats.lock:
+                self.stats.cache_misses += 1
+                self.stats.compile_ms_per_bucket[int(bucket)] = \
+                    plan.compile_ms
         return plan
 
     @property
@@ -231,17 +378,94 @@ class InferenceEngine:
             self.plan_for(b)
 
     # -- request queue -------------------------------------------------------
-    def submit(self, ids_row: np.ndarray) -> None:
-        """Queue one request (a per-field id vector of shape (k,))."""
-        self._queue.append((time.perf_counter(),
-                            np.asarray(ids_row, dtype=np.int32)))
+    def submit(self, ids_row: np.ndarray) -> RequestFuture:
+        """Queue one request (a per-field id vector of shape (k,));
+        returns a future resolving to its score when its batch serves."""
+        fut = RequestFuture()
+        row = np.asarray(ids_row, dtype=np.int32)
+        with self._cv:
+            self._queue.append((fut.t_submit, row, fut))
+            with self.stats.lock:
+                self.stats.queue_depth = len(self._queue)
+            self._cv.notify()
+        return fut
 
-    def submit_many(self, rows: Sequence[np.ndarray]) -> None:
-        for r in rows:
-            self.submit(r)
+    def submit_many(self, rows: Sequence[np.ndarray]) -> list[RequestFuture]:
+        return [self.submit(r) for r in rows]
 
     def pending(self) -> int:
-        return len(self._queue)
+        with self._cv:
+            return len(self._queue)
+
+    # -- background worker ----------------------------------------------------
+    def start(self) -> "InferenceEngine":
+        """Spawn the background worker: drains the queue through the
+        batching policy without caller polling, resolving futures as
+        batches complete. Idempotent; returns self for chaining."""
+        with self._cv:
+            if self._worker is not None:
+                return self
+            self._running = True
+            self._worker = threading.Thread(
+                target=self._worker_loop, daemon=True,
+                name=f"engine-worker-{getattr(self.model.spec, 'name', '?')}")
+            self._worker.start()
+        return self
+
+    def stop(self, flush: bool = True) -> None:
+        """Stop the worker (joins the thread). With ``flush`` (default),
+        force-drain whatever is still queued so no future is left
+        unresolved. Idempotent."""
+        with self._cv:
+            self._running = False
+            self._cv.notify_all()
+        worker, self._worker = self._worker, None
+        if worker is not None:
+            worker.join()
+        if flush:
+            self.flush()
+
+    @property
+    def running(self) -> bool:
+        return self._worker is not None
+
+    def _worker_loop(self) -> None:
+        """Drain full buckets the moment they form; give partial batches a
+        grace window of one ``worker_tick_ms`` for more arrivals before
+        offering them to the policy as partials — so a trickle through
+        ``FixedBatch``/``BucketedBatch`` still coalesces into real batches
+        instead of serving every request the instant it lands, while
+        ``TimeoutBatch`` keeps gating partials on its own explicit SLO
+        (checked each tick until the oldest request ages past it). A
+        steady trickle can keep the queue growing every tick, so an age
+        backstop (8 ticks) guarantees partials are still offered to the
+        policy — arrivals delay a partial batch, they cannot starve it."""
+        tick = self.worker_tick_ms / 1e3
+        while True:
+            with self._cv:
+                while self._running and not self._queue:
+                    self._cv.wait()
+                if not self._running:
+                    return
+            try:
+                if self._serve(allow_partial=False, force=False).size:
+                    continue                         # full buckets drained
+                # nothing full: grace tick — drain partials once arrivals
+                # pause (or the oldest request has waited long enough)
+                with self._cv:
+                    depth0 = len(self._queue)
+                    if self._running and self._queue:
+                        self._cv.wait(tick)
+                    if not self._running:
+                        return
+                    grown = len(self._queue) > depth0
+                    aged = bool(self._queue) and (
+                        (time.perf_counter() - self._queue[0][0])
+                        >= 8 * tick)
+                if not grown or aged:
+                    self._serve(allow_partial=True, force=False)
+            except Exception as exc:                 # keep the loop alive;
+                self.worker_error = exc              # futures already failed
 
     # -- serving ---------------------------------------------------------------
     def serve_pending(self, allow_partial: bool = True) -> np.ndarray:
@@ -249,7 +473,9 @@ class InferenceEngine:
 
         Requests the policy declines to batch (e.g. a partial batch with
         ``allow_partial=False``, or one still inside a timeout window) stay
-        queued untouched.
+        queued untouched. With the background worker running this is
+        usually unnecessary (and may return empty — the worker got there
+        first); the futures from ``submit`` are the async surface.
         """
         return self._serve(allow_partial=allow_partial, force=False)
 
@@ -259,33 +485,55 @@ class InferenceEngine:
 
     def _serve(self, *, allow_partial: bool, force: bool) -> np.ndarray:
         out: list[np.ndarray] = []
-        while self._queue:
-            oldest_wait_ms = (math.inf if force else
-                              (time.perf_counter() - self._queue[0][0]) * 1e3)
-            decision = self.policy.decide(len(self._queue), oldest_wait_ms,
-                                          allow_partial=allow_partial)
-            if decision is None:
-                break
-            items = [self._queue.popleft() for _ in range(decision.take)]
-            t_submit = [it[0] for it in items]
-            rows = np.stack([it[1] for it in items])
-            self._observe_traffic(rows)
-            plan = self.plan_for(decision.bucket)
-            t0 = time.perf_counter()
-            # plan.predict pads to the bucket shape and slices the padding
-            # back off — one output transform shared with the one-shot path
-            scores = plan.predict(rows)
-            t1 = time.perf_counter()
-            out.append(scores)
-            st = self.stats
-            st.n_requests += decision.take
-            st.n_batches += 1
-            st.batches_per_bucket[decision.bucket] = (
-                st.batches_per_bucket.get(decision.bucket, 0) + 1)
-            st.padded_rows_total += decision.bucket - decision.take
-            st.compute_ms_total += (t1 - t0) * 1e3
-            st.latency_ms.extend((t1 - ts) * 1e3 for ts in t_submit)
-            self._maybe_auto_refresh()
+        with self._drain_lock:
+            while True:
+                with self._cv:
+                    if not self._queue:
+                        break
+                    oldest_wait_ms = (
+                        math.inf if force else
+                        (time.perf_counter() - self._queue[0][0]) * 1e3)
+                    decision = self.policy.decide(
+                        len(self._queue), oldest_wait_ms,
+                        allow_partial=allow_partial)
+                    if decision is None:
+                        break
+                    items = [self._queue.popleft()
+                             for _ in range(decision.take)]
+                    with self.stats.lock:
+                        self.stats.queue_depth = len(self._queue)
+                t_submit = [it[0] for it in items]
+                try:
+                    # inside the try: a malformed row (ragged shape) must
+                    # fail its batch's futures, not strand them unresolved
+                    rows = np.stack([it[1] for it in items])
+                    self._observe_traffic(rows)
+                    plan = self.plan_for(decision.bucket)
+                    t0 = time.perf_counter()
+                    # plan.predict pads to the bucket shape and slices the
+                    # padding back off — one output transform shared with
+                    # the one-shot path
+                    scores = plan.predict(rows)
+                    t1 = time.perf_counter()
+                except Exception as exc:
+                    for _, _, fut in items:
+                        fut._fail(exc)
+                    raise
+                out.append(scores)
+                lat = [(t1 - ts) * 1e3 for ts in t_submit]
+                st = self.stats
+                with st.lock:
+                    st.n_requests += decision.take
+                    st.n_batches += 1
+                    st.batches_per_bucket[decision.bucket] = (
+                        st.batches_per_bucket.get(decision.bucket, 0) + 1)
+                    st.padded_rows_total += decision.bucket - decision.take
+                    st.compute_ms_total += (t1 - t0) * 1e3
+                    st.latency_ms.extend(lat)
+                # futures resolve in submit order (items popped FIFO)
+                for (_, _, fut), score, l in zip(items, scores, lat):
+                    fut._resolve(float(score), l)
+                self._maybe_auto_refresh()
         return np.concatenate(out) if out else np.empty((0,))
 
     # -- one-shot --------------------------------------------------------------
@@ -303,7 +551,8 @@ class InferenceEngine:
         if b > largest:
             return np.concatenate([self.predict(ids[i:i + largest])
                                    for i in range(0, b, largest)])
-        self._observe_traffic(ids)
+        with self._drain_lock:    # observe never races a refresh/drain
+            self._observe_traffic(ids)
         bucket = min(bk for bk in self.policy.buckets if bk >= b)
         return self.plan_for(bucket).predict(ids)
 

@@ -1,0 +1,221 @@
+"""ServingRuntime — one async intake over many named engines.
+
+Production CTR serving rarely hosts a single model: ranking and
+pre-ranking models (e.g. ``deepfm`` + ``dcnv2``) sit behind one RPC
+surface, each with its own plan cache, batching policy, and embedding
+tier. ``ServingRuntime`` is that router over ``InferenceEngine``s:
+
+    rt = ServingRuntime()
+    rt.add_model("deepfm", deepfm, p1, policy=TimeoutBatch())
+    rt.add_model("dcnv2", dcnv2, p2, store=CachedStore(...))
+    rt.start()                       # one background worker per engine
+    fut = rt.submit("deepfm", row)   # routed by model name
+    fut.result()
+    rt.stats().p99_ms                # aggregated across engines
+    rt.stop()
+
+The runtime owns
+
+* **per-model routing**: ``submit``/``predict`` dispatch on the model
+  name; unknown names fail fast with the hosted set in the message;
+* **lifecycle fan-out**: ``start``/``stop``/``warmup``/``flush`` reach
+  every engine (each engine drains its own queue on its own worker
+  thread — the intake never blocks on another model's batch);
+* **shared admission cadence**: with ``refresh_every=N`` the runtime
+  counts *total* submitted traffic across models and refreshes every
+  refreshable embedding store each time N more requests arrived — one
+  HugeCTR-style refresh clock for the whole deployment instead of one
+  per engine. Refreshes are double-buffered tensor swaps, so they never
+  recompile any engine's plans;
+* **aggregated stats**: :func:`ServingRuntime.stats` merges the
+  per-engine counters into one :class:`RuntimeStats` snapshot (totals +
+  merged latency percentiles + per-model ``EngineStats``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Sequence
+
+import numpy as np
+
+from .engine import EngineStats, InferenceEngine, RequestFuture
+
+__all__ = ["ServingRuntime", "RuntimeStats"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeStats:
+    """Point-in-time aggregate over every hosted engine.
+
+    ``p50_ms``/``p99_ms`` are computed over the *union* of the engines'
+    rolling latency windows (recent samples, same caveat as
+    ``EngineStats``). ``per_model`` holds the live per-engine stats
+    objects for drill-down.
+    """
+    n_models: int
+    n_requests: int
+    n_batches: int
+    queue_depth: int
+    p50_ms: float
+    p99_ms: float
+    cache_hits: int
+    cache_misses: int
+    emb_cache_refreshes: int
+    per_model: dict[str, EngineStats]
+
+
+class ServingRuntime:
+    """Multi-model router: named ``InferenceEngine``s behind one intake.
+
+    Args:
+        refresh_every: shared admission cadence — refresh every
+            refreshable store once per N submitted requests *across all
+            models* (``None`` disables; engines may still run their own
+            per-engine ``refresh_every``).
+    """
+
+    def __init__(self, *, refresh_every: int | None = None):
+        self._engines: dict[str, InferenceEngine] = {}
+        self.refresh_every = refresh_every
+        self._submitted = 0
+        self._refreshing = False
+        self._refresh_thread: threading.Thread | None = None
+        self._admission_lock = threading.Lock()
+
+    # -- registry ------------------------------------------------------------
+    def add_engine(self, name: str, engine: InferenceEngine
+                   ) -> InferenceEngine:
+        """Host an existing engine under ``name``."""
+        if name in self._engines:
+            raise ValueError(f"model {name!r} already registered")
+        self._engines[name] = engine
+        return engine
+
+    def add_model(self, name: str, model, params,
+                  **engine_kwargs) -> InferenceEngine:
+        """Build and host an ``InferenceEngine`` for ``model`` — kwargs go
+        straight to :class:`InferenceEngine` (policy, store, level, ...)."""
+        return self.add_engine(name,
+                               InferenceEngine(model, params,
+                                               **engine_kwargs))
+
+    def engine(self, name: str) -> InferenceEngine:
+        try:
+            return self._engines[name]
+        except KeyError:
+            raise KeyError(f"no model {name!r}; hosting "
+                           f"{sorted(self._engines)}") from None
+
+    @property
+    def models(self) -> tuple[str, ...]:
+        return tuple(self._engines)
+
+    # -- lifecycle -----------------------------------------------------------
+    def warmup(self) -> None:
+        for eng in self._engines.values():
+            eng.warmup()
+
+    def start(self) -> "ServingRuntime":
+        """Start every engine's background worker. Idempotent."""
+        for eng in self._engines.values():
+            eng.start()
+        return self
+
+    def stop(self, flush: bool = True) -> None:
+        """Stop every worker; with ``flush`` (default) force-drain the
+        leftover queues so no future stays unresolved. Joins any in-flight
+        shared-admission refresh."""
+        for eng in self._engines.values():
+            eng.stop(flush=flush)
+        with self._admission_lock:
+            t, self._refresh_thread = self._refresh_thread, None
+        if t is not None and t.is_alive():
+            t.join()
+
+    # -- intake --------------------------------------------------------------
+    def submit(self, model: str, ids_row: np.ndarray) -> RequestFuture:
+        """Route one request to ``model``'s engine; returns its future."""
+        fut = self.engine(model).submit(ids_row)
+        self._count_and_maybe_refresh(1)
+        return fut
+
+    def submit_many(self, model: str, rows: Sequence[np.ndarray]
+                    ) -> list[RequestFuture]:
+        futs = self.engine(model).submit_many(rows)
+        self._count_and_maybe_refresh(len(futs))
+        return futs
+
+    def predict(self, model: str, ids) -> np.ndarray:
+        """One-shot scores through ``model``'s engine (bypasses queues)."""
+        return self.engine(model).predict(ids)
+
+    def flush(self) -> dict[str, np.ndarray]:
+        """Force-drain every engine; per-model scores in submit order."""
+        return {name: eng.flush() for name, eng in self._engines.items()}
+
+    # -- shared admission ----------------------------------------------------
+    def _count_and_maybe_refresh(self, n: int) -> None:
+        if not self.refresh_every:
+            return
+        with self._admission_lock:
+            before = self._submitted
+            self._submitted += n
+            crossed = (self._submitted // self.refresh_every
+                       > before // self.refresh_every)
+            if crossed and not self._refreshing:
+                # off the intake hot path: the boundary-crossing submit
+                # must not pay the multi-store rebuild (or wait on drain
+                # locks) — refreshes are double-buffered swaps, so a short
+                # lag between crossing and publish is harmless. Non-daemon
+                # (and joined in stop()): a daemon thread killed
+                # mid-device-upload at interpreter exit aborts the
+                # process. Registered under the lock so stop() can never
+                # miss an in-flight refresh.
+                self._refreshing = True
+                t = threading.Thread(target=self._refresh_in_background,
+                                     name="runtime-admission-refresh")
+                self._refresh_thread = t
+                t.start()
+
+    def _refresh_in_background(self) -> None:
+        try:
+            self.refresh_all()
+        finally:
+            with self._admission_lock:
+                self._refreshing = False
+
+    def refresh_all(self) -> int:
+        """Refresh every refreshable embedding store (double-buffered swap
+        — no engine loses a compiled plan). Returns how many refreshed."""
+        n = 0
+        for eng in self._engines.values():
+            store = eng.store
+            if store is not None and store.refreshable:
+                eng.refresh_cache()
+                n += 1
+        return n
+
+    # -- stats ---------------------------------------------------------------
+    def stats(self) -> RuntimeStats:
+        """Aggregate snapshot across engines (see :class:`RuntimeStats`)."""
+        lat: list[float] = []
+        tot = dict(n_requests=0, n_batches=0, queue_depth=0, cache_hits=0,
+                   cache_misses=0, emb_cache_refreshes=0)
+        for eng in self._engines.values():
+            st = eng.stats
+            with st.lock:
+                lat.extend(st.latency_ms)
+                tot["n_requests"] += st.n_requests
+                tot["n_batches"] += st.n_batches
+                tot["queue_depth"] += st.queue_depth
+                tot["cache_hits"] += st.cache_hits
+                tot["cache_misses"] += st.cache_misses
+                tot["emb_cache_refreshes"] += st.emb_cache_refreshes
+        return RuntimeStats(
+            n_models=len(self._engines),
+            p50_ms=float(np.percentile(lat, 50)) if lat else 0.0,
+            p99_ms=float(np.percentile(lat, 99)) if lat else 0.0,
+            per_model={n: e.stats for n, e in self._engines.items()},
+            **tot)

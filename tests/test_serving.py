@@ -250,7 +250,9 @@ def test_engine_with_cached_store_matches_dense():
     assert eng_d.stats.emb_cache_hits == eng_d.stats.emb_cache_misses == 0
 
 
-def test_engine_refresh_cache_invalidates_plans_and_stays_exact():
+def test_engine_refresh_cache_preserves_plans_and_stays_exact():
+    """A refresh is a double-buffered tensor swap: the store tensors are
+    runtime inputs of every compiled plan, so the plan cache survives."""
     from repro.embedding import CachedStore
     model, params = make()
     direct = InferenceEngine(model, params, policy=FixedBatch(8))
@@ -262,11 +264,13 @@ def test_engine_refresh_cache_invalidates_plans_and_stays_exact():
     eng = InferenceEngine(model_c, params_c, policy=FixedBatch(8),
                           store=store)
     got0 = eng.predict(np.stack(rows))
-    assert len(eng.cached_plans) == 1
+    keys0 = eng.cached_plans
+    assert len(keys0) == 1
     eng.refresh_cache()
-    assert len(eng.cached_plans) == 0            # plans baked the old cache
+    assert eng.cached_plans == keys0             # plans survive the swap
     assert eng.stats.emb_cache_refreshes == 1
-    got1 = eng.predict(np.stack(rows))           # recompiles, same scores
+    got1 = eng.predict(np.stack(rows))           # no recompile, same scores
+    assert eng.stats.cache_misses == 1
     np.testing.assert_array_equal(got0, got1)
     np.testing.assert_array_equal(got1, want)
 

@@ -1,0 +1,437 @@
+"""Async serving runtime tests (ISSUE-3 acceptance surface).
+
+Covers: futures-based intake (resolution values, submit order, latency
+stamps), the background worker draining a ``TimeoutBatch`` SLO without
+caller polling, refresh-without-recompile (plan-cache keys identical, zero
+new compiles, bit-exact vs ``DenseStore`` across ≥2 refreshes under zipf
+traffic), thread-safe stats with ``queue_depth``, the multi-model
+``ServingRuntime`` router, and the deprecated ``core.fused_embedding``
+import shim.
+"""
+
+import importlib
+import sys
+import threading
+
+import numpy as np
+import pytest
+import jax
+
+from repro.configs import ctr_spec
+from repro.data.synthetic import CRITEO, zipf_ids
+from repro.embedding import CachedStore
+from repro.models.ctr import CTR_MODELS
+from repro.serving import (BucketedBatch, FixedBatch, InferenceEngine,
+                           RequestFuture, ServingRuntime, TimeoutBatch)
+
+SCHEMA = CRITEO.scaled(2_000)
+SPEC_KW = dict(embed_dim=8, hidden=64, max_field=2_000)
+
+
+def make(model_name="widedeep"):
+    spec = ctr_spec(model_name, "criteo", **SPEC_KW)
+    model = CTR_MODELS[model_name](spec)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def rows_of(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [np.array([rng.integers(0, s) for s in SCHEMA.field_sizes],
+                     dtype=np.int32) for _ in range(n)]
+
+
+def zipf_rows(n, seed=0, exponent=1.1):
+    return list(np.asarray(zipf_ids(jax.random.PRNGKey(seed), n,
+                                    SCHEMA.field_sizes, exponent=exponent)))
+
+
+def direct_scores(model, params, rows):
+    import jax.numpy as jnp
+    return np.asarray(model.predict_proba(params,
+                                          jnp.asarray(np.stack(rows))))
+
+
+# --- futures ------------------------------------------------------------------
+
+def test_submit_returns_future_resolved_by_sync_drain():
+    model, params = make()
+    eng = InferenceEngine(model, params, policy=FixedBatch(8))
+    rows = rows_of(8)
+    futs = eng.submit_many(rows)
+    assert all(isinstance(f, RequestFuture) and not f.done() for f in futs)
+    drained = eng.serve_pending()
+    assert all(f.done() for f in futs)
+    got = np.array([f.result() for f in futs])
+    np.testing.assert_array_equal(got, drained)
+    np.testing.assert_allclose(got, direct_scores(model, params, rows),
+                               rtol=1e-5, atol=1e-5)
+    assert all(f.latency_ms is not None and f.latency_ms >= 0 for f in futs)
+
+
+def test_future_result_times_out_when_unserved():
+    model, params = make()
+    eng = InferenceEngine(model, params, policy=FixedBatch(8))
+    fut = eng.submit(rows_of(1)[0])
+    with pytest.raises(TimeoutError):
+        fut.result(timeout=0.01)
+
+
+def test_futures_resolve_in_submit_order_under_worker():
+    """ISSUE-3 satellite: the worker resolves futures FIFO — within each
+    batch and across batches — observed via done-callbacks."""
+    model, params = make()
+    eng = InferenceEngine(model, params, policy=BucketedBatch((8, 16)))
+    eng.warmup()
+    rows = rows_of(43)
+    resolved = []
+    lock = threading.Lock()
+    eng.start()
+    try:
+        futs = eng.submit_many(rows)
+        for i, f in enumerate(futs):
+            f.add_done_callback(
+                lambda fut, _i=i: (lock.acquire(), resolved.append(_i),
+                                   lock.release()))
+        got = np.array([f.result(timeout=60.0) for f in futs])
+    finally:
+        eng.stop()
+    # every request resolved exactly once, in submit order
+    assert sorted(resolved) == list(range(43))
+    within_batch_sorted = all(resolved[i] < resolved[i + 1]
+                              for i in range(len(resolved) - 1))
+    assert within_batch_sorted, resolved
+    np.testing.assert_allclose(got, direct_scores(model, params, rows),
+                               rtol=1e-5, atol=1e-5)
+
+
+# --- background worker --------------------------------------------------------
+
+def test_worker_fires_timeout_slo_without_polling():
+    """ISSUE-3 satellite: a partial batch inside a TimeoutBatch window is
+    drained by the worker once the oldest request ages past the SLO —
+    no serve_pending/flush call anywhere."""
+    model, params = make()
+    eng = InferenceEngine(
+        model, params,
+        policy=TimeoutBatch(FixedBatch(8), max_wait_ms=25.0),
+        worker_tick_ms=1.0)
+    eng.warmup()
+    eng.start()
+    try:
+        rows = rows_of(3)
+        futs = eng.submit_many(rows)           # partial: below the bucket
+        got = np.array([f.result(timeout=60.0) for f in futs])
+    finally:
+        eng.stop()
+    st = eng.stats
+    assert st.n_batches == 1 and st.batches_per_bucket == {8: 1}
+    assert st.n_requests == 3 and eng.pending() == 0
+    np.testing.assert_allclose(got, direct_scores(model, params, rows),
+                               rtol=1e-5, atol=1e-5)
+    # queued → served latency must cover the SLO wait the policy imposed
+    assert st.p50_ms >= 25.0
+
+
+def test_worker_drains_full_buckets_immediately():
+    model, params = make()
+    eng = InferenceEngine(
+        model, params,
+        policy=TimeoutBatch(FixedBatch(8), max_wait_ms=60_000.0))
+    eng.warmup()
+    eng.start()
+    try:
+        futs = eng.submit_many(rows_of(16))    # two full buckets: no SLO wait
+        for f in futs:
+            f.result(timeout=60.0)
+    finally:
+        eng.stop(flush=False)
+    assert eng.stats.n_batches == 2
+    assert eng.stats.queue_depth == 0
+
+
+def test_start_stop_lifecycle_idempotent_and_flushing():
+    model, params = make()
+    eng = InferenceEngine(
+        model, params,
+        policy=TimeoutBatch(FixedBatch(8), max_wait_ms=60_000.0))
+    eng.start()
+    eng.start()                                 # idempotent
+    assert eng.running
+    futs = eng.submit_many(rows_of(3))          # held by the SLO window
+    eng.stop()                                  # join + flush leftovers
+    assert not eng.running
+    assert all(f.done() for f in futs)
+    assert eng.pending() == 0
+    eng.stop()                                  # idempotent after stop
+
+
+def test_sync_surface_still_works_alongside_worker_api():
+    """serve_pending/flush/predict remain the sync surface when no worker
+    is started — exact pre-async behaviour."""
+    model, params = make()
+    eng = InferenceEngine(model, params, policy=BucketedBatch((8, 16)))
+    eng.submit_many(rows_of(20))
+    scores = np.concatenate([eng.serve_pending(), eng.flush()])
+    assert scores.shape == (20,)
+    assert eng.stats.queue_depth == 0
+
+
+# --- stats thread-safety (ISSUE-3 satellite) ---------------------------------
+
+def test_stats_expose_queue_depth():
+    model, params = make()
+    eng = InferenceEngine(model, params, policy=FixedBatch(8))
+    eng.submit_many(rows_of(5))
+    assert eng.stats.queue_depth == 5
+    eng.flush()
+    assert eng.stats.queue_depth == 0
+
+
+def test_concurrent_submitters_with_worker_lose_no_request():
+    """Counters stay consistent with many submitter threads racing the
+    worker: every request served exactly once, totals add up."""
+    model, params = make()
+    eng = InferenceEngine(model, params, policy=BucketedBatch((8, 16)),
+                          worker_tick_ms=0.2)
+    eng.warmup()
+    eng.start()
+    futs_per_thread = {}
+
+    def submitter(tid):
+        futs_per_thread[tid] = eng.submit_many(rows_of(24, seed=tid))
+
+    threads = [threading.Thread(target=submitter, args=(t,))
+               for t in range(4)]
+    try:
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        all_futs = [f for fs in futs_per_thread.values() for f in fs]
+        for f in all_futs:
+            f.result(timeout=60.0)
+    finally:
+        eng.stop()
+    st = eng.stats
+    assert st.n_requests == 4 * 24
+    assert st.queue_depth == 0 and eng.pending() == 0
+    assert sum(st.batches_per_bucket.values()) == st.n_batches
+    assert eng.worker_error is None
+    # per-thread scores match the direct forward (routing never mixed rows)
+    for tid, futs in futs_per_thread.items():
+        got = np.array([f.result() for f in futs])
+        np.testing.assert_allclose(
+            got, direct_scores(model, params, rows_of(24, seed=tid)),
+            rtol=1e-5, atol=1e-5)
+
+
+def test_malformed_row_fails_batch_futures_instead_of_hanging():
+    """A ragged row in a batch must fail that batch's futures (stack
+    raises before compute) — never strand them unresolved."""
+    model, params = make()
+    eng = InferenceEngine(model, params, policy=FixedBatch(4))
+    futs = eng.submit_many(rows_of(3))
+    bad = eng.submit(np.zeros(len(SCHEMA.field_sizes) + 1, dtype=np.int32))
+    with pytest.raises(ValueError):
+        eng.flush()
+    for f in futs + [bad]:
+        assert f.done()
+        with pytest.raises(ValueError):
+            f.result(timeout=0)
+
+
+def test_raising_done_callback_does_not_strand_other_futures():
+    model, params = make()
+    eng = InferenceEngine(model, params, policy=FixedBatch(8))
+    futs = eng.submit_many(rows_of(8))
+    futs[0].add_done_callback(lambda f: 1 / 0)     # hostile callback
+    seen = []
+    futs[1].add_done_callback(lambda f: seen.append(f.result()))
+    eng.serve_pending()
+    assert all(f.done() for f in futs)             # nobody left hanging
+    assert seen == [futs[1].result()]
+
+
+# --- refresh-without-recompile (ISSUE-3 satellite + acceptance) ---------------
+
+def test_refresh_without_recompile_bit_exact_zipf():
+    """≥2 refreshes under zipf traffic: plan-cache keys identical, zero new
+    compiles, scores bit-exact vs DenseStore throughout."""
+    model_d, params_d = make()
+    dense = InferenceEngine(model_d, params_d, policy=BucketedBatch((8, 16)))
+
+    model_c, params_c = make()
+    store = CachedStore(model_c.spec.embedding_spec(), capacity=128)
+    eng = InferenceEngine(model_c, params_c, policy=BucketedBatch((8, 16)),
+                          store=store)
+    eng.warmup()
+    keys0 = set(eng.cached_plans)
+    compiles0 = eng.stats.cache_misses
+
+    for round_ in range(3):
+        rows = zipf_rows(24, seed=round_)
+        want = dense.predict(np.stack(rows))
+        eng.submit_many(rows)
+        got = eng.serve_pending()
+        np.testing.assert_array_equal(got, want)   # bit-exact, every round
+        eng.refresh_cache()                        # swap tensors, keep plans
+        assert set(eng.cached_plans) == keys0      # identical cache keys
+        assert eng.stats.cache_misses == compiles0  # zero new compiles
+
+    assert store.stats.refreshes >= 2
+    assert eng.stats.emb_cache_refreshes >= 2
+    # after refreshes the index map tracks the zipf head: hot traffic mass
+    # should be covered by the cache
+    assert eng.stats.emb_cached_traffic_fraction > 0.0
+
+
+def test_plan_runtime_inputs_exposed():
+    """Plans compiled against a refreshable store advertise the store
+    tensors they take per call; dense plans advertise none."""
+    from repro.core import compile_plan
+    model_d, params_d = make()
+    assert compile_plan(model_d, params_d, "dual", 8).runtime_inputs == ()
+
+    model_c, params_c = make()
+    store = CachedStore(model_c.spec.embedding_spec(), capacity=64)
+    params_c = model_c.use_store(store, params_c)
+    plan = compile_plan(model_c, params_c, "dual", 8)
+    assert plan.runtime_inputs == ("emb:backing", "emb:cache",
+                                   "emb:slot_of_row")
+
+
+def test_refresh_under_running_worker_stays_exact():
+    """Refresh concurrently with a draining worker: the double-buffered
+    publish means every batch reads a consistent (old or new) tensor set
+    — scores stay bit-exact with the dense reference."""
+    model_d, params_d = make()
+    dense = InferenceEngine(model_d, params_d, policy=FixedBatch(8))
+    rows = zipf_rows(64, seed=7)
+    want = dense.predict(np.stack(rows))
+
+    model_c, params_c = make()
+    store = CachedStore(model_c.spec.embedding_spec(), capacity=128)
+    eng = InferenceEngine(model_c, params_c, policy=FixedBatch(8),
+                          store=store, refresh_every=2)  # refresh mid-stream
+    eng.warmup()
+    eng.start()
+    try:
+        futs = eng.submit_many(rows)
+        got = np.array([f.result(timeout=60.0) for f in futs])
+    finally:
+        eng.stop()
+    np.testing.assert_array_equal(got, want)
+    assert store.stats.refreshes >= 2
+    assert eng.stats.cache_misses == 1             # the single warmed bucket
+
+
+# --- multi-model runtime (acceptance) ----------------------------------------
+
+def test_runtime_routes_two_models_async_bit_exact():
+    """Acceptance: ServingRuntime serves 2 models concurrently through the
+    async intake with per-model stats and bit-exact scores vs the
+    synchronous path."""
+    rt = ServingRuntime()
+    built = {}
+    for name in ("widedeep", "dcn"):
+        model, params = make(name)
+        built[name] = (model, params)
+        rt.add_model(name, model, params,
+                     policy=TimeoutBatch(BucketedBatch((8, 16)),
+                                         max_wait_ms=5.0),
+                     worker_tick_ms=1.0)
+    assert rt.models == ("widedeep", "dcn")
+    rt.warmup()
+    rt.start()
+    try:
+        futs = {n: rt.submit_many(n, rows_of(21, seed=i))
+                for i, n in enumerate(rt.models)}
+        got = {n: np.array([f.result(timeout=60.0) for f in fs])
+               for n, fs in futs.items()}
+    finally:
+        rt.stop()
+    for i, name in enumerate(rt.models):
+        model, params = built[name]
+        # bit-exact vs the synchronous engine path on the same rows
+        sync_eng = InferenceEngine(model, params,
+                                   policy=BucketedBatch((8, 16)))
+        sync_eng.submit_many(rows_of(21, seed=i))
+        want = np.concatenate([sync_eng.serve_pending(), sync_eng.flush()])
+        np.testing.assert_array_equal(got[name], want)
+        # per-model stats kept separately
+        assert rt.engine(name).stats.n_requests == 21
+    agg = rt.stats()
+    assert agg.n_models == 2 and agg.n_requests == 42
+    assert agg.queue_depth == 0
+    assert agg.per_model["widedeep"] is rt.engine("widedeep").stats
+    assert agg.p99_ms >= agg.p50_ms >= 0.0
+
+
+def test_runtime_rejects_unknown_and_duplicate_models():
+    rt = ServingRuntime()
+    model, params = make()
+    rt.add_model("widedeep", model, params, policy=FixedBatch(8))
+    with pytest.raises(ValueError, match="already registered"):
+        rt.add_engine("widedeep",
+                      InferenceEngine(model, params, policy=FixedBatch(8)))
+    with pytest.raises(KeyError, match="widedeep"):
+        rt.submit("nope", rows_of(1)[0])
+
+
+def test_runtime_shared_admission_refreshes_all_stores():
+    """refresh_every counts submitted traffic across models and swaps
+    every refreshable store's cache (asynchronously — the crossing submit
+    never pays the rebuild) — without dropping any plans."""
+    import time as _time
+
+    def wait_refreshes(stores, n, deadline_s=30.0):
+        t0 = _time.perf_counter()
+        while _time.perf_counter() - t0 < deadline_s:
+            if all(s.stats.refreshes >= n for s in stores.values()):
+                return
+            _time.sleep(0.005)
+        raise AssertionError(
+            f"stores never reached {n} refreshes: "
+            f"{[s.stats.refreshes for s in stores.values()]}")
+
+    rt = ServingRuntime(refresh_every=16)
+    stores = {}
+    for name in ("widedeep", "dcn"):
+        model, params = make(name)
+        stores[name] = CachedStore(model.spec.embedding_spec(), capacity=64)
+        rt.add_model(name, model, params, policy=FixedBatch(8),
+                     store=stores[name])
+    rt.warmup()
+    plans = {n: set(rt.engine(n).cached_plans) for n in rt.models}
+    for i in range(2):                       # 2×16 submits → 2 shared refreshes
+        for name in rt.models:
+            rt.submit_many(name, rows_of(8, seed=i))
+        rt.flush()
+        wait_refreshes(stores, i + 1)        # refresh runs off-thread
+    assert all(s.stats.refreshes == 2 for s in stores.values())
+    for n in rt.models:                      # plan caches survived both swaps
+        assert set(rt.engine(n).cached_plans) == plans[n]
+        assert rt.engine(n).stats.cache_misses == 1
+
+
+# --- deprecated shim (ISSUE-3 satellite) -------------------------------------
+
+def test_fused_embedding_shim_warns_on_import():
+    sys.modules.pop("repro.core.fused_embedding", None)
+    with pytest.warns(DeprecationWarning, match="repro.embedding"):
+        mod = importlib.import_module("repro.core.fused_embedding")
+    # shim still re-exports the full surface
+    from repro.embedding import CachedStore as real
+    assert mod.CachedStore is real
+
+
+def test_core_import_does_not_touch_shim():
+    """repro.core must not trigger the deprecation path anymore — in-repo
+    callers are routed straight to repro.embedding."""
+    sys.modules.pop("repro.core.fused_embedding", None)
+    import warnings as w
+    with w.catch_warnings():
+        w.simplefilter("error", DeprecationWarning)
+        importlib.reload(importlib.import_module("repro.core"))
+    assert "repro.core.fused_embedding" not in sys.modules
