@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import argparse
 import inspect
+import json
 import sys
 import time
 import traceback
@@ -23,11 +24,16 @@ def main() -> None:
                     help="tiny smoke config (implies --quick)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of benchmark names")
+    ap.add_argument("--json", default=None,
+                    help="write every driver's run() result dict to this "
+                         "JSON file (CI uploads it as the perf-trajectory "
+                         "artifact)")
     args = ap.parse_args()
 
     from . import (accuracy_parity, breakdown, e2e_speedup, embedding_cache,
                    embedding_sensitivity, roofline_report, scheduling,
-                   serving_async, serving_batching, workload_allocation)
+                   serving_async, serving_batching, serving_mesh,
+                   workload_allocation)
     suites = {
         "accuracy_parity": accuracy_parity,       # Table I
         "e2e_speedup": e2e_speedup,               # Fig. 7 / Table II
@@ -38,10 +44,12 @@ def main() -> None:
         "scheduling": scheduling,                 # Fig. 12/13
         "serving_batching": serving_batching,     # Fig. 7 serving policies
         "serving_async": serving_async,           # async runtime + refresh
+        "serving_mesh": serving_mesh,             # multi-chip plans+refresh
         "roofline_report": roofline_report,       # §Roofline
     }
     only = set(args.only.split(",")) if args.only else None
     failed = []
+    collected: dict[str, dict] = {}
     for name, mod in suites.items():
         if only and name not in only:
             continue
@@ -51,11 +59,20 @@ def main() -> None:
         if args.dry and "dry" in inspect.signature(mod.run).parameters:
             kwargs["dry"] = True
         try:
-            mod.run(**kwargs)
+            result = mod.run(**kwargs)
+            if isinstance(result, dict):
+                collected[name] = result
         except Exception:
             traceback.print_exc()
             failed.append(name)
         print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+    if args.json:
+        with open(args.json, "w") as f:
+            # default=str: numpy scalars/bools and PartitionSpecs all
+            # stringify rather than breaking the artifact dump
+            json.dump({"failed": failed, "results": collected}, f,
+                      indent=2, default=str, sort_keys=True)
+        print(f"# wrote {args.json}")
     if failed:
         print(f"# FAILED: {failed}")
         sys.exit(1)

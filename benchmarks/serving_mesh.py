@@ -1,0 +1,178 @@
+"""Multi-chip serving benchmark — 1-device vs simulated-mesh plans, and
+mesh-aware refresh plan-survival.
+
+Three measurements on the same zipf request stream:
+
+  1. **1dev**: the dense single-device engine (no mesh) — the throughput
+     and numerics baseline.
+  2. **mesh**: the same model served through ``compile_plan(mesh=...)``
+     on a data-only mesh and on a data×model mesh — batch inputs sharded
+     over the data axis, embedding tables vocab-parallel over the model
+     axis. On a host-simulated CPU mesh the *throughput* numbers mostly
+     show partitioning overhead (every "chip" is a thread of one CPU);
+     the structural properties are the point and are hard-asserted when
+     >1 device is available:
+       - the plan's ``input_shardings["ids"]`` puts the batch dim on
+         ``data``;
+       - the engine's published ``backing`` table is row-sharded over
+         ``model`` (cache + ``slot_of_row`` replicated);
+       - mesh scores match the 1-device baseline (tight tolerance — XLA
+         partitioning may differ by float ulps).
+  3. **refresh survival**: a ``CachedStore`` engine on the data×model
+     mesh refreshes under zipf traffic; the post-refresh serve must be
+     **bit-exact** with the pre-refresh serve and the plan cache must
+     report zero new compiles (the published tensors were placed to the
+     plans' shardings — a true multi-chip refresh, HugeCTR-style).
+
+Run directly (simulates 8 host devices unless XLA_FLAGS already forces a
+count) or via ``benchmarks.run``; the CI ``tier1-mesh`` job runs
+``--dry`` under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+"""
+
+from __future__ import annotations
+
+import os
+
+if __name__ == "__main__":  # direct runs: simulate chips before jax loads
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            _flags + " --xla_force_host_platform_device_count=8").strip()
+
+import time
+
+import numpy as np
+import jax
+
+from repro.compat import make_mesh
+from repro.configs import ctr_spec
+from repro.data.synthetic import CRITEO, zipf_ids
+from repro.embedding import CachedStore
+from repro.models.ctr import CTR_MODELS
+from repro.serving import BucketedBatch, InferenceEngine
+
+from .common import emit
+
+MAX_FIELD = 100_000
+
+
+def _build(model_name, max_field, ladder, mesh=None, cache_capacity=None,
+           **eng_kwargs):
+    spec = ctr_spec(model_name, "criteo", 16, 256, max_field=max_field)
+    model = CTR_MODELS[model_name](spec)
+    params = model.init(jax.random.PRNGKey(0))
+    store = (CachedStore(spec.embedding_spec(), capacity=cache_capacity)
+             if cache_capacity else None)
+    return InferenceEngine(model, params, mesh=mesh, store=store,
+                           policy=BucketedBatch(ladder), **eng_kwargs)
+
+
+def _serve(eng, ids, waves):
+    """Sync wave drain; returns (seconds, scores in submit order)."""
+    out = []
+    t0 = time.perf_counter()
+    for wave in np.array_split(ids, waves):
+        eng.submit_many(list(wave))
+        out.append(eng.serve_pending())
+    out.append(eng.flush())
+    return time.perf_counter() - t0, np.concatenate(out)
+
+
+def run(quick: bool = False, dry: bool = False) -> dict:
+    dc = jax.device_count()
+    n = 96 if dry else (400 if quick else 2000)
+    ladder = (8, 16) if dry else (32, 64, 128, 256)
+    max_field = 2_000 if dry else MAX_FIELD
+    model_name = "widedeep" if (dry or quick) else "dcnv2"
+    waves = 4 if dry else 10
+    schema = CRITEO.scaled(max_field)
+    ids = np.asarray(zipf_ids(jax.random.PRNGKey(0), n,
+                              schema.field_sizes, exponent=1.1))
+    results = {"devices": dc}
+
+    # --- 1-device baseline -------------------------------------------------
+    eng1 = _build(model_name, max_field, ladder)
+    eng1.warmup()
+    dt1, want = _serve(eng1, ids, waves)
+    emit(f"serving_mesh/{model_name}/1dev", dt1 / n * 1e6,
+         f"req_s={n/dt1:.0f} p99_ms={eng1.stats.p99_ms:.1f} "
+         f"batches={eng1.stats.n_batches}")
+    results["1dev/req_s"] = n / dt1
+
+    # --- mesh shapes to exercise ------------------------------------------
+    if dc >= 8:
+        shapes = [((8,), ("data",)), ((4, 2), ("data", "model"))]
+    elif dc >= 2:
+        shapes = [((dc,), ("data",)), ((dc // 2 or 1, 2), ("data", "model"))]
+    else:
+        print("# serving_mesh: 1 device — run under XLA_FLAGS="
+              "--xla_force_host_platform_device_count=8 for the real "
+              "multi-chip sweep; exercising a 1x1 mesh only")
+        shapes = [((1, 1), ("data", "model"))]
+
+    for sizes, axes in shapes:
+        mesh = make_mesh(sizes, axes)
+        tag = "x".join(f"{a}{s}" for a, s in zip(axes, sizes))
+        eng = _build(model_name, max_field, ladder, mesh=mesh)
+        eng.warmup()
+        dt, got = _serve(eng, ids, waves)
+        emit(f"serving_mesh/{model_name}/mesh_{tag}", dt / n * 1e6,
+             f"req_s={n/dt:.0f} p99_ms={eng.stats.p99_ms:.1f} "
+             f"batches={eng.stats.n_batches}")
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6,
+                                   err_msg=f"mesh {tag} vs 1dev")
+        # structural contract: batch inputs sharded over the data axis
+        # (every ladder bucket divides the data axis in this config)
+        plan = eng.plan_for(ladder[-1])
+        ids_spec = plan.input_shardings["ids"].spec
+        if dc >= 2:
+            assert ids_spec[0] == "data", ids_spec
+        results[f"mesh_{tag}/req_s"] = n / dt
+        results[f"mesh_{tag}/ids_spec"] = str(ids_spec)
+
+    # --- mesh-aware refresh survival --------------------------------------
+    sizes, axes = shapes[-1]
+    mesh = make_mesh(sizes, axes)
+    tag = "x".join(f"{a}{s}" for a, s in zip(axes, sizes))
+    eng = _build(model_name, max_field, ladder, mesh=mesh,
+                 cache_capacity=max(64, max_field // 50),
+                 refresh_every=2)              # refresh every 2 batches
+    eng.warmup()
+    compiles_before = eng.stats.cache_misses
+    plans_before = set(eng.cached_plans)
+    _, pre = _serve(eng, ids, waves)           # refreshes fire mid-stream
+    eng.refresh_cache()
+    _, post = _serve(eng, ids, waves)
+    st = eng.stats
+    survived = (st.cache_misses == compiles_before
+                and set(eng.cached_plans) == plans_before)
+    bit_exact = bool(np.array_equal(pre, post))
+    sub = eng.params[eng.model.main_embedding_key]
+    backing_spec = sub["backing"].sharding.spec
+    cache_spec = sub["cache"].sharding.spec
+    emit(f"serving_mesh/{model_name}/refresh_{tag}",
+         st.compute_ms_total / max(st.n_batches, 1) * 1e3,
+         f"refreshes={st.emb_cache_refreshes} compiles={st.cache_misses} "
+         f"survived={survived} bit_exact={bit_exact} "
+         f"backing={backing_spec} cache={cache_spec}")
+    assert survived, "refresh recompiled or dropped plans on the mesh"
+    assert bit_exact, "post-refresh serve is not bit-exact"
+    np.testing.assert_allclose(post, want, rtol=1e-5, atol=1e-6,
+                               err_msg="post-refresh mesh vs 1dev")
+    if "model" in axes and dict(zip(axes, sizes)).get("model", 1) > 1:
+        # published (post-refresh) backing must still be row-sharded
+        assert tuple(backing_spec)[0] == "model", backing_spec
+        assert all(a is None for a in tuple(cache_spec)), cache_spec
+    results["refresh/survived"] = survived
+    results["refresh/bit_exact"] = bit_exact
+    results["refresh/backing_spec"] = str(backing_spec)
+    return results
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--dry", action="store_true")
+    args = ap.parse_args()
+    print(run(quick=args.quick, dry=args.dry))

@@ -12,7 +12,7 @@ convenience); ``core/fused_embedding.py`` is a deprecated import shim.
 
 from .dual_parallel import (BRANCH_ORDERS, LEVELS, DualParallelExecutor,
                             ExecutorStats)
-from .plan import InferencePlan, PlanKey, compile_plan
+from .plan import InferencePlan, PlanKey, compile_plan, place_params
 from repro.embedding import (CachedStore, DenseStore, EmbeddingStore,
                              FusedEmbeddingCollection, FusedEmbeddingSpec,
                              StoreStats, sharded_vocab_lookup)
@@ -28,6 +28,7 @@ __all__ = [
     "InferencePlan",
     "PlanKey",
     "compile_plan",
+    "place_params",
     "FusedEmbeddingCollection",
     "FusedEmbeddingSpec",
     "EmbeddingStore",

@@ -21,10 +21,15 @@ same decomposition):
      plans keyed by ``(model, level, batch_bucket)`` plus a pluggable
      batching policy (``repro.serving.batching``).
 
-With ``mesh=`` the embedding mega-tables are placed row-sharded
-(vocab-parallel, the ``FusedEmbeddingCollection.partition_spec`` placement)
-over the mesh's model axis before tracing, so the compiled program runs
-under GSPMD.
+With ``mesh=`` the plan is a real multi-chip serving artifact: the
+embedding mega-tables are placed row-sharded (vocab-parallel, the
+``FusedEmbeddingCollection.partition_spec`` placement) over the mesh's
+model axis before tracing, per-call batch inputs are sharded over the data
+axis, and the compiled program runs under GSPMD. The resolved placements
+are recorded on the plan (``input_shardings``/``runtime_shardings``) so
+the serving layers can ``device_put`` incoming batches and — critically —
+so a cache refresh republishes *placed* tensors (``place_params`` /
+``EmbeddingStore.place``) instead of unplaced host arrays.
 
 ``DualParallelExecutor`` remains the graph-preparation machinery underneath;
 user code should not need to touch it directly anymore.
@@ -44,7 +49,8 @@ from .dual_parallel import (BRANCH_ORDERS, LEVELS, DualParallelExecutor,
                             ExecutorStats)
 from .opgraph import OpGraph
 
-__all__ = ["PlanKey", "InferencePlan", "compile_plan", "plan_key_for"]
+__all__ = ["PlanKey", "InferencePlan", "compile_plan", "plan_key_for",
+           "place_params"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,6 +107,18 @@ class InferencePlan:
     donate: bool
     compile_ms: float
     runtime_inputs: tuple[str, ...] = ()
+    #: mesh the plan was compiled against (None = single device)
+    mesh: jax.sharding.Mesh | None = None
+    #: per-call input leaf -> NamedSharding ("ids": batch dim over the
+    #: mesh's data axis, fit_spec fallback for odd batch sizes); empty
+    #: without a mesh. The step device_puts incoming batches to these, and
+    #: engines may pre-place batches themselves.
+    input_shardings: dict = dataclasses.field(default_factory=dict)
+    #: runtime-input edge -> NamedSharding (the store placement the step
+    #: was lowered against: backing/mega row-sharded over model, cache +
+    #: slot_of_row replicated). A mesh-aware refresh MUST republish fresh
+    #: tensors placed to exactly these.
+    runtime_shardings: dict = dataclasses.field(default_factory=dict)
 
     @property
     def level(self) -> str:
@@ -146,7 +164,8 @@ def _shard_params(params: Any, mesh: jax.sharding.Mesh, model_axis: str,
     fall back to replication; ``specs=None`` replicates everything.
     """
     from jax.sharding import NamedSharding, PartitionSpec as P
-    n_shards = dict(zip(mesh.axis_names, mesh.devices.shape))[model_axis]
+    n_shards = dict(zip(mesh.axis_names, mesh.devices.shape)).get(
+        model_axis, 1)
     if specs is None:
         specs = jax.tree.map(lambda _: P(), params)
 
@@ -159,6 +178,24 @@ def _shard_params(params: Any, mesh: jax.sharding.Mesh, model_axis: str,
         return jax.device_put(leaf, NamedSharding(mesh, spec))
 
     return jax.tree.map(place, params, specs)
+
+
+def place_params(model, params: Any, mesh: jax.sharding.Mesh,
+                 model_axis: str = "model") -> Any:
+    """Place a model's params on ``mesh`` per its structural
+    ``partition_spec`` (embedding subtrees delegated to their store:
+    backing/mega row-sharded vocab-parallel, cache tiers replicated).
+
+    The one placement entry point shared by :func:`compile_plan` and
+    ``InferenceEngine`` — an engine with a mesh places its live params
+    here once at construction, so the provider feeding runtime store
+    tensors into compiled steps always hands out *placed* arrays. On a
+    mesh without the model axis (e.g. ``data``-only), tables replicate.
+    """
+    axis = model_axis if model_axis in mesh.axis_names else None
+    specs = (model.partition_spec(params, axis)
+             if hasattr(model, "partition_spec") else None)
+    return _shard_params(params, mesh, axis, specs)
 
 
 def compile_plan(model, params: Any, level: str = "dual",
@@ -178,7 +215,13 @@ def compile_plan(model, params: Any, level: str = "dual",
         level: one of ``repro.core.LEVELS`` (the Fig.-8 ladder).
         batch_size: the fixed batch shape this plan serves.
         mesh: optional device mesh; mega-tables are row-sharded over its
-            ``model_axis`` before tracing (vocab-parallel placement).
+            ``model_axis`` before tracing (vocab-parallel placement) and
+            per-call batch inputs are sharded over its data axis
+            (``distributed.sharding.batch_specs`` with a ``fit_spec``
+            replication fallback when the batch size doesn't divide the
+            axis). The resolved placements are recorded on the plan
+            (``input_shardings``/``runtime_shardings``) so engines can
+            ``device_put`` incoming batches and refresh swaps to them.
         donate: donate the input buffer to the compiled step (XLA may
             reuse it; callers must treat submitted arrays as consumed).
             Only meaningful at level ``"dual"`` — the eager levels dispatch
@@ -199,9 +242,7 @@ def compile_plan(model, params: Any, level: str = "dual",
         raise ValueError(f"branch_order must be one of {BRANCH_ORDERS}, "
                          f"got {branch_order!r}")
     if mesh is not None:
-        specs = (model.partition_spec(params, model_axis)
-                 if hasattr(model, "partition_spec") else None)
-        params = _shard_params(params, mesh, model_axis, specs)
+        params = place_params(model, params, mesh, model_axis)
 
     executor = DualParallelExecutor(model.build_graph, level=level,
                                     branch_order=branch_order)
@@ -217,21 +258,54 @@ def compile_plan(model, params: Any, level: str = "dual",
     provider = runtime_provider if runtime_provider is not None \
         else (lambda: runtime)
 
+    # resolved shardings (the multi-chip serving contract, recorded on the
+    # plan): per-call inputs batch-sharded over the mesh's data axis with
+    # fit_spec fallback for batch sizes the axis doesn't divide; runtime
+    # store tensors carry the placement place_params gave them (backing/
+    # mega row-sharded over model, cache + slot_of_row replicated)
+    in_shardings: dict = {}
+    rt_shardings: dict = {}
+    if mesh is not None:
+        from repro.distributed.sharding import input_shardings
+        in_shardings = input_shardings(
+            mesh, {"ids": jax.ShapeDtypeStruct((batch_size, n_fields),
+                                               jnp.int32)})
+        rt_shardings = {k: v.sharding for k, v in runtime.items()}
+
+    def bind_inputs(ids: jax.Array) -> dict:
+        if in_shardings:
+            ids = jax.device_put(ids, in_shardings["ids"])
+        return {"ids": ids}
+
+    def bind_runtime() -> dict:
+        env = provider()
+        if rt_shardings:
+            # no-op for tensors already placed (the refresh path places
+            # before publishing); a safety net for callers that swap in
+            # raw host arrays
+            env = {k: jax.device_put(v, rt_shardings[k])
+                   for k, v in env.items()}
+        return env
+
     if level == "dual":
-        # AOT: lower + compile the whole-graph program now, not on first use
-        spec = {"ids": jax.ShapeDtypeStruct((batch_size, n_fields),
-                                            jnp.int32)}
-        rt_spec = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+        # AOT: lower + compile the whole-graph program now, not on first
+        # use — with the resolved input/runtime shardings baked into the
+        # lowered avals so GSPMD partitions the program for the mesh
+        spec = {"ids": jax.ShapeDtypeStruct(
+            (batch_size, n_fields), jnp.int32,
+            sharding=in_shardings.get("ids"))}
+        rt_spec = {k: jax.ShapeDtypeStruct(v.shape, v.dtype,
+                                           sharding=rt_shardings.get(k))
                    for k, v in runtime.items()}
         compiled = step_env.lower(spec, rt_spec).compile()
 
         def step(ids: jax.Array) -> jax.Array:
-            return compiled({"ids": ids}, provider())
+            return compiled(bind_inputs(ids), bind_runtime())
     else:
         # eager levels dispatch op-by-op on purpose; warm every per-op jit
         # so serving latency never includes compiles
         def step(ids: jax.Array) -> jax.Array:
-            return step_env({"ids": ids}, provider())
+            return step_env(bind_inputs(ids), bind_runtime())
         jax.block_until_ready(
             step(jnp.zeros((batch_size, n_fields), dtype=jnp.int32)))
     compile_ms = (time.perf_counter() - t0) * 1e3
@@ -243,4 +317,6 @@ def compile_plan(model, params: Any, level: str = "dual",
     return InferencePlan(key=key, stats=stats, graph=graph,
                          order=tuple(order), step=step, n_fields=n_fields,
                          donate=donate, compile_ms=compile_ms,
-                         runtime_inputs=tuple(sorted(runtime)))
+                         runtime_inputs=tuple(sorted(runtime)),
+                         mesh=mesh, input_shardings=in_shardings,
+                         runtime_shardings=rt_shardings)

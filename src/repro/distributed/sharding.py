@@ -27,7 +27,7 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["LOGICAL_RULES", "make_shard_fn", "param_specs", "batch_specs",
-           "cache_specs", "to_named", "mesh_batch_axes"]
+           "cache_specs", "to_named", "mesh_batch_axes", "input_shardings"]
 
 
 def mesh_batch_axes(mesh: Mesh) -> tuple[str, ...]:
@@ -229,9 +229,10 @@ def ctr_param_specs(shapes: Any) -> Any:
 # ---------------------------------------------------------------------------
 
 def batch_specs(mesh: Mesh, batch_tree: Any) -> Any:
-    """Shard the leading (global-batch) dim of every batch leaf."""
+    """Shard the leading (global-batch) dim of every batch leaf (replicate
+    everything on a mesh with no batch axis at all)."""
     b = mesh_batch_axes(mesh)
-    b = b if len(b) > 1 else b[0]
+    b = b if len(b) > 1 else (b[0] if b else None)
 
     def leaf(x):
         return P(*([b] + [None] * (x.ndim - 1)))
@@ -312,3 +313,13 @@ def to_named(mesh: Mesh, spec_tree: Any) -> Any:
     return jax.tree.map(
         lambda s: NamedSharding(mesh, s), spec_tree,
         is_leaf=lambda s: isinstance(s, P))
+
+
+def input_shardings(mesh: Mesh, shapes: Any) -> Any:
+    """NamedShardings for per-call plan inputs (``ids``/``weights``-style
+    leaves): leading global-batch dim over the mesh's batch axes
+    (``batch_specs``), fitted per leaf (``fit_spec``) so a batch size the
+    data axis doesn't divide falls back to replication on that dim instead
+    of tripping pjit's argument-divisibility rule."""
+    specs = fit_spec_tree(mesh, batch_specs(mesh, shapes), shapes)
+    return to_named(mesh, specs)

@@ -53,6 +53,14 @@ class CachedStore(EmbeddingStore):
     Because all three tensors are ``runtime_keys``, compiled plans take
     them as per-call inputs and survive the swap untouched — a refresh
     costs two device uploads, never a recompile.
+
+    Multi-chip: ``partition_spec`` keeps ``backing`` row-sharded
+    (vocab-parallel over the model axis) with ``cache``/``slot_of_row``
+    replicated. ``refresh`` works on a *placed* backing unchanged — the
+    eager gather in ``_with_cache`` reads across shards — and the caller
+    (``InferenceEngine.refresh_cache``) republishes the fresh subtree
+    through :meth:`EmbeddingStore.place` so the swap lands on the exact
+    shardings every compiled plan was lowered against.
     """
 
     refreshable = True

@@ -121,6 +121,32 @@ class EmbeddingStore:
         """PartitionSpec subtree matching :meth:`init`'s structure."""
         raise NotImplementedError
 
+    def place(self, params: dict, mesh, model_axis: str | None = "model"
+              ) -> dict:
+        """``device_put`` the param subtree onto ``mesh`` per
+        :meth:`partition_spec` (vocab-parallel tables, replicated cache
+        tiers), dropping mesh axes a leaf's dim doesn't divide.
+
+        The **mesh-aware refresh primitive**: a refresh builds fresh
+        tensors host-side, and the engine places them here before the
+        double-buffered swap so it publishes *placed* tensors, never
+        unplaced host arrays. The specs are re-derived from the same
+        ``partition_spec`` the compile-time placement used, so they match
+        the shardings recorded on every plan (``runtime_shardings``);
+        were they ever to diverge, the plan step's per-call ``device_put``
+        re-places the tensors — a cross-device copy on the hot path, not
+        a recompile or a wrong answer (tests pin the match).
+        """
+        from repro.distributed.sharding import fit_spec
+        from jax.sharding import NamedSharding
+        if mesh is None:
+            return params
+        axis = model_axis if model_axis in mesh.axis_names else None
+        specs = self.partition_spec(axis)
+        return {k: jax.device_put(
+                    v, NamedSharding(mesh, fit_spec(mesh, specs[k], v.shape)))
+                for k, v in params.items()}
+
     def dense_view(self, params: dict) -> jax.Array:
         """The full (rows, d) table — the serial/naive level and the
         sharded shard_map path gather straight from it."""

@@ -5,12 +5,21 @@
     PYTHONPATH=src python -m repro.launch.serve --models deepfm,dcnv2 --async
     PYTHONPATH=src python -m repro.launch.serve --mode lm --arch llama3-8b
 
+    # multi-chip serving on a simulated 8-device CPU mesh:
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+    PYTHONPATH=src python -m repro.launch.serve --mesh data=4,model=2 \\
+        --store cached --refresh-every 4
+
 The CTR path is the compile→plan→engine→runtime flow: a ``ServingRuntime``
 hosting one ``InferenceEngine`` (plan cache + batching policy picked by
 ``--policy``) per ``--models`` entry. With ``--async`` each engine's
 background worker drains its queue (futures-based intake — the
 ``TimeoutBatch`` SLO fires without caller polling); without it the driver
-drains synchronously per wave.
+drains synchronously per wave. ``--mesh data=N[,model=M]`` serves every
+model through sharded plans: batches over the data axis, embedding tables
+vocab-parallel over the model axis, cache refreshes placed to the plans'
+shardings (on CPU, set ``XLA_FLAGS=--xla_force_host_platform_device_count``
+*before* launch to simulate the chips).
 """
 
 import argparse
@@ -29,6 +38,34 @@ def _make_policy(args):
     if args.policy == "bucketed":
         return BucketedBatch(ladder)
     return TimeoutBatch(BucketedBatch(ladder), max_wait_ms=args.max_wait_ms)
+
+
+def _make_mesh(spec: str | None):
+    """``"data=4,model=2"`` -> a device mesh (None passes through).
+
+    Axis order follows the spec string; sizes must multiply to at most
+    ``jax.device_count()`` — on CPU, simulate chips with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set in the
+    environment before python starts; jax reads it at first device use).
+    """
+    if not spec:
+        return None
+    from repro.compat import make_mesh
+    axes, sizes = [], []
+    for part in spec.split(","):
+        name, _, size = part.partition("=")
+        if not size:
+            raise SystemExit(f"--mesh: expected axis=N, got {part!r}")
+        axes.append(name.strip())
+        sizes.append(int(size))
+    need = int(np.prod(sizes))
+    have = jax.device_count()
+    if need > have:
+        raise SystemExit(
+            f"--mesh {spec} needs {need} devices, found {have}; on CPU "
+            "launch with XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{need}")
+    return make_mesh(tuple(sizes), tuple(axes))
 
 
 def _traffic(args, schema):
@@ -63,7 +100,12 @@ def serve_ctr(args) -> None:
     names = [n.strip() for n in
              (args.models.split(",") if args.models else [args.model])]
     schema = CRITEO.scaled(100_000)
-    rt = ServingRuntime(refresh_every=args.runtime_refresh_every)
+    mesh = _make_mesh(args.mesh)
+    if mesh is not None:
+        print(f"[serve] mesh {dict(mesh.shape)} over "
+              f"{mesh.devices.size} devices")
+    rt = ServingRuntime(refresh_every=args.runtime_refresh_every,
+                        mesh=mesh)
     for name in names:
         spec = ctr_spec(name, "criteo", 16, 256, max_field=100_000)
         model = CTR_MODELS[name](spec)
@@ -143,6 +185,10 @@ def main() -> None:
                     help="comma-separated bucket ladder for bucketed/timeout")
     ap.add_argument("--max-wait-ms", type=float, default=5.0)
     ap.add_argument("--requests", type=int, default=500)
+    ap.add_argument("--mesh", default=None,
+                    help="device mesh for multi-chip serving, e.g. "
+                         "'data=8' or 'data=4,model=2' (batches shard "
+                         "over data, embedding tables over model)")
     ap.add_argument("--store", default="dense", choices=["dense", "cached"],
                     help="embedding store tier (repro.embedding)")
     ap.add_argument("--cache-capacity", type=int, default=65536,

@@ -10,7 +10,7 @@ engine, shared admission cadence).
 from .batching import (BatchDecision, BatchPolicy, BucketedBatch, FixedBatch,
                        TimeoutBatch)
 from .engine import (CTRServingEngine, EngineStats, InferenceEngine,
-                     RequestFuture, ServeStats)
+                     QueueFullError, RequestFuture, ServeStats)
 from .runtime import RuntimeStats, ServingRuntime
 from .generate import generate
 
@@ -18,6 +18,7 @@ __all__ = [
     "InferenceEngine",
     "EngineStats",
     "RequestFuture",
+    "QueueFullError",
     "ServingRuntime",
     "RuntimeStats",
     "BatchPolicy",

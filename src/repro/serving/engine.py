@@ -52,11 +52,18 @@ from typing import Callable, Sequence
 import numpy as np
 import jax
 
-from repro.core.plan import InferencePlan, PlanKey, compile_plan, plan_key_for
+from repro.core.plan import (InferencePlan, PlanKey, compile_plan,
+                             place_params, plan_key_for)
 from .batching import BatchPolicy, BucketedBatch, FixedBatch
 
 __all__ = ["InferenceEngine", "EngineStats", "RequestFuture",
-           "CTRServingEngine", "ServeStats"]
+           "QueueFullError", "CTRServingEngine", "ServeStats"]
+
+
+class QueueFullError(RuntimeError):
+    """``submit`` rejected a request because the engine's queue is at
+    ``max_queue_depth`` (backpressure: a stalled device must surface as
+    fast failures at the intake, not as an unbounded queue)."""
 
 
 class RequestFuture:
@@ -148,7 +155,9 @@ class EngineStats:
     ``n_requests``/``compute_ms_total``.
 
     ``queue_depth`` is the number of submitted-but-unserved requests at
-    the last queue transition (kept current by the engine).
+    the last queue transition (kept current by the engine); ``n_rejected``
+    counts submits refused by the ``max_queue_depth`` backpressure bound
+    (their futures fail with :class:`QueueFullError`).
 
     The ``emb_*`` counters mirror the engine's embedding store
     (``CachedStore``): row-lookup hits/misses against the current index
@@ -159,6 +168,7 @@ class EngineStats:
     """
     n_requests: int = 0
     n_batches: int = 0
+    n_rejected: int = 0
     queue_depth: int = 0
     compute_ms_total: float = 0.0
     latency_window: int = 8192
@@ -218,12 +228,14 @@ class InferenceEngine:
         level: Fig.-8 executor level for every plan this engine compiles.
         policy: batching policy; default ``BucketedBatch()``.
         branch_order: breadth-first head-branch choice (§V-H).
-        mesh: optional device mesh — plans shard the embedding tables
-            row-wise over its model axis (placement delegated to the
-            model/store ``partition_spec``). Note: combining ``mesh`` with
-            a refreshable store currently republishes unplaced tensors at
-            refresh time — fine on a single-device mesh, not yet wired for
-            true multi-chip refresh.
+        mesh: optional device mesh — the engine places its live params on
+            it up front (embedding tables row-sharded over the model axis,
+            placement delegated to the model/store ``partition_spec``) and
+            every plan it compiles shards per-call batches over the data
+            axis. ``refresh_cache()`` republishes fresh store tensors
+            *placed to the plan's shardings* (``EmbeddingStore.place``),
+            so the double-buffered swap stays a true multi-chip refresh:
+            no recompiles, no unplaced host arrays behind compiled steps.
         donate: donate input buffers to the compiled steps (level "dual"
             only; the eager levels ignore it). Runtime store tensors are
             never donated.
@@ -238,6 +250,11 @@ class InferenceEngine:
             tensors as runtime inputs and survive untouched — so N trades
             admission freshness against host-side rebuild work only.
             ``None`` = manual ``refresh_cache()`` only.
+        max_queue_depth: optional backpressure bound — ``submit`` beyond
+            this many queued-but-unserved requests *rejects*: the returned
+            future fails with :class:`QueueFullError` instead of the queue
+            growing without bound on a stalled device (``stats.n_rejected``
+            counts rejections). ``None`` (default) never rejects.
         latency_window: size of the rolling latency window behind
             ``stats.p50_ms``/``p99_ms`` (see ``EngineStats``).
         worker_tick_ms: how long the background worker sleeps between
@@ -252,12 +269,20 @@ class InferenceEngine:
                  donate: bool = False,
                  store=None,
                  refresh_every: int | None = None,
+                 max_queue_depth: int | None = None,
                  latency_window: int = 8192,
                  worker_tick_ms: float = 0.5):
         self.model = model
         if store is not None:
             params = model.use_store(store, params)
+        if mesh is not None:
+            # place the live params once: the runtime provider behind every
+            # compiled plan reads self.params, so the tensors it hands out
+            # must already carry the mesh placement (compile_plan's own
+            # place_params is then a no-op re-put of placed arrays)
+            params = place_params(model, params, mesh)
         self.params = params
+        self.max_queue_depth = max_queue_depth
         self.level = level
         self.policy = policy if policy is not None else BucketedBatch()
         self.branch_order = branch_order
@@ -319,7 +344,11 @@ class InferenceEngine:
         publishes the new tree in one atomic reference swap. Every
         compiled plan takes the store tensors as runtime inputs
         (``InferencePlan.runtime_inputs``), so the **plan cache survives
-        intact — a refresh never recompiles**. No-op for cacheless
+        intact — a refresh never recompiles**. With a mesh, the fresh
+        tensors are placed to the plans' runtime shardings
+        (``EmbeddingStore.place`` — backing row-sharded, cache/index map
+        replicated) *before* the swap, so the published tree never holds
+        unplaced host arrays on a >1-device mesh. No-op for cacheless
         stores.
         """
         store = self.store
@@ -332,6 +361,8 @@ class InferenceEngine:
         with self._drain_lock:
             key = getattr(self.model, "main_embedding_key", "emb")
             fresh = store.refresh(self.params[key])   # built on the side
+            if self.mesh is not None:
+                fresh = store.place(fresh, self.mesh)
             self.params = {**self.params, key: fresh}  # atomic publish
             with self.stats.lock:
                 self.stats.emb_cache_refreshes = store.stats.refreshes
@@ -380,10 +411,21 @@ class InferenceEngine:
     # -- request queue -------------------------------------------------------
     def submit(self, ids_row: np.ndarray) -> RequestFuture:
         """Queue one request (a per-field id vector of shape (k,));
-        returns a future resolving to its score when its batch serves."""
+        returns a future resolving to its score when its batch serves —
+        or an already-failed future (:class:`QueueFullError`) when the
+        queue is at ``max_queue_depth`` (backpressure)."""
         fut = RequestFuture()
         row = np.asarray(ids_row, dtype=np.int32)
         with self._cv:
+            if (self.max_queue_depth is not None
+                    and len(self._queue) >= self.max_queue_depth):
+                with self.stats.lock:
+                    self.stats.n_rejected += 1
+                fut._fail(QueueFullError(
+                    f"queue at max_queue_depth={self.max_queue_depth} "
+                    f"({self.stats.n_rejected} rejected so far); the device "
+                    "is not keeping up — shed load or raise the bound"))
+                return fut
             self._queue.append((fut.t_submit, row, fut))
             with self.stats.lock:
                 self.stats.queue_depth = len(self._queue)

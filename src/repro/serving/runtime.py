@@ -57,6 +57,7 @@ class RuntimeStats:
     n_models: int
     n_requests: int
     n_batches: int
+    n_rejected: int
     queue_depth: int
     p50_ms: float
     p99_ms: float
@@ -74,11 +75,18 @@ class ServingRuntime:
             refreshable store once per N submitted requests *across all
             models* (``None`` disables; engines may still run their own
             per-engine ``refresh_every``).
+        mesh: shared device mesh — the default for every
+            :meth:`add_model` that doesn't pass its own ``mesh=``. Each
+            hosted engine then serves multi-chip: params placed up front,
+            batches sharded over the data axis, and the shared admission
+            refreshes republish store tensors placed to the plans'
+            shardings (never unplaced host arrays).
     """
 
-    def __init__(self, *, refresh_every: int | None = None):
+    def __init__(self, *, refresh_every: int | None = None, mesh=None):
         self._engines: dict[str, InferenceEngine] = {}
         self.refresh_every = refresh_every
+        self.mesh = mesh
         self._submitted = 0
         self._refreshing = False
         self._refresh_thread: threading.Thread | None = None
@@ -96,7 +104,9 @@ class ServingRuntime:
     def add_model(self, name: str, model, params,
                   **engine_kwargs) -> InferenceEngine:
         """Build and host an ``InferenceEngine`` for ``model`` — kwargs go
-        straight to :class:`InferenceEngine` (policy, store, level, ...)."""
+        straight to :class:`InferenceEngine` (policy, store, level, ...);
+        the runtime's shared ``mesh`` applies unless overridden here."""
+        engine_kwargs.setdefault("mesh", self.mesh)
         return self.add_engine(name,
                                InferenceEngine(model, params,
                                                **engine_kwargs))
@@ -201,14 +211,15 @@ class ServingRuntime:
     def stats(self) -> RuntimeStats:
         """Aggregate snapshot across engines (see :class:`RuntimeStats`)."""
         lat: list[float] = []
-        tot = dict(n_requests=0, n_batches=0, queue_depth=0, cache_hits=0,
-                   cache_misses=0, emb_cache_refreshes=0)
+        tot = dict(n_requests=0, n_batches=0, n_rejected=0, queue_depth=0,
+                   cache_hits=0, cache_misses=0, emb_cache_refreshes=0)
         for eng in self._engines.values():
             st = eng.stats
             with st.lock:
                 lat.extend(st.latency_ms)
                 tot["n_requests"] += st.n_requests
                 tot["n_batches"] += st.n_batches
+                tot["n_rejected"] += st.n_rejected
                 tot["queue_depth"] += st.queue_depth
                 tot["cache_hits"] += st.cache_hits
                 tot["cache_misses"] += st.cache_misses

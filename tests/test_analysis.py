@@ -66,8 +66,8 @@ def test_collective_bytes_counted_once_per_op():
     if jax.device_count() < 2:
         import pytest
         pytest.skip("needs >1 device")
-    mesh = jax.make_mesh((jax.device_count(),), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.compat import make_mesh
+    mesh = make_mesh((jax.device_count(),), ("data",))
 
     def f(x):
         return jnp.sum(x)                 # all-reduce over data

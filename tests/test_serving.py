@@ -307,3 +307,49 @@ def test_predict_chunking_through_cached_store():
                [(k.model, k.level, k.batch_size) for k in eng.cached_plans]) \
         <= {8, 16}
     np.testing.assert_array_equal(got, want)
+
+
+# --- backpressure (max_queue_depth) ------------------------------------------
+
+def test_submit_backpressure_rejects_beyond_max_queue_depth():
+    from repro.serving import QueueFullError
+    model, params = make()
+    eng = InferenceEngine(model, params, policy=BucketedBatch((8,)),
+                          max_queue_depth=4)
+    futs = eng.submit_many(rows_of(7))
+    rejected = [f for f in futs if f.done()]
+    assert len(rejected) == 3 and eng.stats.n_rejected == 3
+    for f in rejected:
+        with pytest.raises(QueueFullError):
+            f.result(timeout=0.1)
+    # the accepted 4 still serve, in submit order, unaffected
+    scores = eng.flush()
+    assert scores.shape == (4,)
+    accepted = [f for f in futs if f not in rejected]
+    np.testing.assert_allclose([f.result(timeout=5.0) for f in accepted],
+                               scores, rtol=1e-6)
+    assert eng.stats.n_requests == 4
+
+
+def test_submit_backpressure_reopens_after_drain():
+    model, params = make()
+    eng = InferenceEngine(model, params, policy=BucketedBatch((8,)),
+                          max_queue_depth=2)
+    eng.submit_many(rows_of(2))
+    assert eng.submit(rows_of(1)[0]).done()          # full -> rejected
+    eng.flush()                                       # drains the queue
+    fut = eng.submit(rows_of(1)[0])                   # accepted again
+    assert not fut.done()
+    scores = eng.flush()
+    assert scores.shape == (1,)
+    assert fut.result(timeout=5.0) == pytest.approx(float(scores[0]))
+    assert eng.stats.n_rejected == 1
+
+
+def test_backpressure_default_is_unbounded():
+    model, params = make()
+    eng = InferenceEngine(model, params, policy=BucketedBatch((8,)))
+    futs = eng.submit_many(rows_of(40))
+    assert not any(f.done() for f in futs)
+    eng.flush()
+    assert eng.stats.n_rejected == 0 and eng.stats.n_requests == 40

@@ -1,0 +1,223 @@
+"""Multi-chip serving tests on simulated host-device meshes.
+
+These parameterize over real >1-device meshes (2x1 and 4x2), so they skip
+on a plain single-device run; the CI ``tier1-mesh`` job forces
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so every one of
+them runs on every PR. Core acceptance: zipf traffic through a
+``CachedStore`` engine on a mesh stays (tight-tolerance) equal to the
+dense 1-device baseline, ``refresh_cache()`` keeps scores **bit-exact**
+across the swap with **zero plan recompiles**, and the published tensors
+carry the plans' shardings (backing row-sharded over model, cache +
+``slot_of_row`` replicated, batches over data).
+"""
+
+import numpy as np
+import pytest
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import make_mesh
+from repro.configs import ctr_spec
+from repro.core import compile_plan
+from repro.data.synthetic import CRITEO, zipf_ids
+from repro.embedding import CachedStore
+from repro.serving import BucketedBatch, InferenceEngine, ServingRuntime
+
+SCHEMA = CRITEO.scaled(2_000)
+SPEC_KW = dict(embed_dim=8, hidden=64, max_field=2_000)
+
+
+def needs(n):
+    return pytest.mark.skipif(
+        jax.device_count() < n,
+        reason=f"needs {n} devices (run under XLA_FLAGS="
+               "--xla_force_host_platform_device_count=8)")
+
+
+def make(model_name="widedeep"):
+    from repro.models.ctr import CTR_MODELS
+    spec = ctr_spec(model_name, "criteo", **SPEC_KW)
+    model = CTR_MODELS[model_name](spec)
+    params = model.init(jax.random.PRNGKey(0))
+    return spec, model, params
+
+
+def zipf_stream(n, seed=0, exponent=1.1):
+    return np.asarray(zipf_ids(jax.random.PRNGKey(seed), n,
+                               SCHEMA.field_sizes, exponent=exponent))
+
+
+def serve_waves(eng, ids, waves=4):
+    out = []
+    for wave in np.array_split(ids, waves):
+        eng.submit_many(list(wave))
+        out.append(eng.serve_pending())
+    out.append(eng.flush())
+    return np.concatenate(out)
+
+
+# --- the multi-chip refresh acceptance (ISSUE-5 satellite) -------------------
+
+@pytest.mark.parametrize("shape", [pytest.param((2, 1), marks=needs(2)),
+                                   pytest.param((4, 2), marks=needs(8))])
+def test_mesh_refresh_bitexact_vs_dense_baseline(shape):
+    """Zipf traffic on a 2x1 / 4x2 mesh: CachedStore engine matches the
+    dense 1-device baseline, refresh keeps scores bit-exact, and the plan
+    cache reports zero recompiles across every refresh."""
+    spec, model, params = make()
+    ids = zipf_stream(96)
+    _, base_model, base_params = make()
+    base = InferenceEngine(base_model, base_params,
+                           policy=BucketedBatch((8, 16)))
+    want = serve_waves(base, ids)
+
+    mesh = make_mesh(shape, ("data", "model"))
+    store = CachedStore(spec.embedding_spec(), capacity=128)
+    eng = InferenceEngine(model, params, mesh=mesh, store=store,
+                          policy=BucketedBatch((8, 16)), refresh_every=2)
+    eng.warmup()
+    compiles = eng.stats.cache_misses
+    plans = set(eng.cached_plans)
+
+    got = serve_waves(eng, ids)          # auto-refreshes fire mid-stream
+    # sharded scores == 1-device baseline (XLA partitioning may differ by
+    # float ulps; the store swap itself is bit-exact by construction)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    pre = eng.predict(ids[:16])
+    eng.refresh_cache()
+    post = eng.predict(ids[:16])
+    np.testing.assert_array_equal(pre, post)      # bit-exact across swap
+    assert eng.stats.emb_cache_refreshes > 0
+    assert eng.stats.cache_misses == compiles     # zero recompiles
+    assert set(eng.cached_plans) == plans
+
+
+@pytest.mark.parametrize("shape", [pytest.param((2, 1), marks=needs(2)),
+                                   pytest.param((4, 2), marks=needs(8))])
+def test_mesh_refresh_publishes_placed_tensors(shape):
+    """The double-buffered swap must publish tensors already placed to
+    the plans' shardings — backing row-sharded over model (when the axis
+    is >1), cache and slot_of_row replicated — not unplaced host arrays."""
+    spec, model, params = make()
+    mesh = make_mesh(shape, ("data", "model"))
+    store = CachedStore(spec.embedding_spec(), capacity=64)
+    eng = InferenceEngine(model, params, mesh=mesh, store=store,
+                          policy=BucketedBatch((8,)))
+    eng.predict(zipf_stream(32))
+    eng.refresh_cache()
+    sub = eng.params[eng.model.main_embedding_key]
+    plan = eng.plan_for(8)
+    for leaf in ("backing", "cache", "slot_of_row"):
+        sh = sub[leaf].sharding
+        assert isinstance(sh, jax.sharding.NamedSharding), (leaf, sh)
+        assert sh.mesh.shape == mesh.shape, leaf
+        # published placement must match what the plans were lowered
+        # against — the refresh re-derivation (EmbeddingStore.place) and
+        # the recorded plan contract may never drift apart
+        recorded = plan.runtime_shardings[f"emb:{leaf}"]
+        assert sh.is_equivalent_to(recorded, sub[leaf].ndim), (
+            leaf, sh, recorded)
+    backing_dims = tuple(sub["backing"].sharding.spec)
+    if shape[1] > 1:
+        assert backing_dims[0] == "model", backing_dims
+    assert all(a is None for a in tuple(sub["cache"].sharding.spec))
+
+
+# --- resolved plan shardings -------------------------------------------------
+
+@needs(8)
+def test_plan_input_shardings_batch_over_data_axis():
+    _, model, params = make()
+    mesh = make_mesh((4, 2), ("data", "model"))
+    plan = compile_plan(model, params, "dual", 16, mesh=mesh)
+    assert plan.mesh is mesh
+    assert tuple(plan.input_shardings["ids"].spec) == ("data", None)
+
+
+@needs(8)
+def test_plan_input_shardings_odd_batch_falls_back_to_replication():
+    """A batch size the data axis doesn't divide must compile (fit_spec
+    drops the axis) and still serve correctly."""
+    _, model, params = make()
+    ids = zipf_stream(6)
+    want = compile_plan(model, params, "dual", 6).predict(ids)
+    mesh = make_mesh((4, 2), ("data", "model"))
+    plan = compile_plan(model, params, "dual", 6, mesh=mesh)
+    assert tuple(plan.input_shardings["ids"].spec)[0] is None
+    np.testing.assert_allclose(plan.predict(ids), want,
+                               rtol=1e-5, atol=1e-6)
+
+
+@needs(8)
+def test_plan_runtime_shardings_follow_store_partition_spec():
+    spec, model, params = make()
+    store = CachedStore(spec.embedding_spec(), capacity=64)
+    params = model.use_store(store, params)
+    mesh = make_mesh((4, 2), ("data", "model"))
+    plan = compile_plan(model, params, "dual", 8, mesh=mesh)
+    rt = plan.runtime_shardings
+    assert tuple(rt["emb:backing"].spec) == ("model", None)
+    assert rt["emb:cache"].is_fully_replicated
+    assert rt["emb:slot_of_row"].is_fully_replicated
+    assert not rt["emb:backing"].is_fully_replicated
+    assert set(plan.runtime_inputs) == set(rt)
+
+
+@needs(8)
+def test_data_only_mesh_replicates_tables_and_shards_batches():
+    """--mesh data=N style: no model axis — tables replicate, batches
+    still shard over data."""
+    _, model, params = make()
+    ids = zipf_stream(16)
+    want = compile_plan(model, params, "dual", 16).predict(ids)
+    mesh = make_mesh((8,), ("data",))
+    plan = compile_plan(model, params, "dual", 16, mesh=mesh)
+    assert tuple(plan.input_shardings["ids"].spec) == ("data", None)
+    np.testing.assert_allclose(plan.predict(ids), want,
+                               rtol=1e-5, atol=1e-6)
+
+
+@needs(8)
+def test_eager_levels_serve_on_mesh():
+    """The non-AOT levels dispatch op-by-op over placed params; they must
+    agree with the unsharded plan too."""
+    _, model, params = make()
+    ids = zipf_stream(8)
+    want = compile_plan(model, params, "dual", 8).predict(ids)
+    mesh = make_mesh((4, 2), ("data", "model"))
+    for level in ("fused_emb", "fused_all"):
+        got = compile_plan(model, params, level, 8, mesh=mesh).predict(ids)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6,
+                                   err_msg=level)
+
+
+# --- runtime-level mesh serving ----------------------------------------------
+
+@needs(8)
+def test_serving_runtime_shares_mesh_and_refreshes_placed():
+    """ServingRuntime(mesh=...) hands the mesh to every hosted engine and
+    its shared-admission refresh_all republishes placed tensors."""
+    spec, m1, p1 = make("widedeep")
+    _, m2, p2 = make("dcn")
+    mesh = make_mesh((4, 2), ("data", "model"))
+    rt = ServingRuntime(mesh=mesh)
+    rt.add_model("widedeep", m1, p1, policy=BucketedBatch((8,)),
+                 store=CachedStore(spec.embedding_spec(), capacity=64))
+    rt.add_model("dcn", m2, p2, policy=BucketedBatch((8,)))
+    assert rt.engine("widedeep").mesh is mesh
+    assert rt.engine("dcn").mesh is mesh
+
+    ids = zipf_stream(32)
+    pre = rt.predict("widedeep", ids)
+    assert rt.refresh_all() == 1
+    post = rt.predict("widedeep", ids)
+    np.testing.assert_array_equal(pre, post)
+    sub = rt.engine("widedeep").params["emb"]
+    assert tuple(sub["backing"].sharding.spec) == ("model", None)
+
+    _, base_model, base_params = make("dcn")
+    base = InferenceEngine(base_model, base_params,
+                           policy=BucketedBatch((8,)))
+    np.testing.assert_allclose(rt.predict("dcn", ids), base.predict(ids),
+                               rtol=1e-5, atol=1e-6)
