@@ -1,0 +1,78 @@
+"""Structural perf-trajectory diff: fresh ``run.py --json`` vs a committed
+baseline.
+
+    PYTHONPATH=src python -m benchmarks.run --dry --only embedding_host \\
+        --json fresh.json
+    python -m benchmarks.diff_baseline BENCH_embedding.json fresh.json
+
+CPU timings are noise-bound in CI, so the committed baseline
+(``BENCH_embedding.json``) pins only each cell's ``structural`` sub-dict —
+counters that are deterministic for fixed traffic (hit rates, resolved
+rows, byte budgets, assertion outcomes). This tool compares exactly those:
+every suite cell carrying a ``structural`` key must match the baseline
+field-for-field, and the cell sets must agree. Timing fields are ignored.
+
+Exit 0 when the structural trajectory is unchanged; exit 1 with a
+field-level report otherwise — an intentional change means regenerating
+and committing the baseline alongside the code change.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _structural_cells(doc: dict) -> dict:
+    """``{suite/cell: structural_dict}`` for every cell that pins one."""
+    out = {}
+    for suite, cells in doc.get("results", {}).items():
+        if not isinstance(cells, dict):
+            continue
+        for cell, payload in cells.items():
+            if isinstance(payload, dict) and "structural" in payload:
+                out[f"{suite}/{cell}"] = payload["structural"]
+    return out
+
+
+def diff(baseline: dict, fresh: dict) -> list[str]:
+    base, new = _structural_cells(baseline), _structural_cells(fresh)
+    problems = []
+    for name in sorted(set(base) - set(new)):
+        problems.append(f"{name}: cell missing from fresh run")
+    for name in sorted(set(new) - set(base)):
+        problems.append(f"{name}: new cell absent from baseline "
+                        "(regenerate the baseline to admit it)")
+    for name in sorted(set(base) & set(new)):
+        b, f = base[name], new[name]
+        for field in sorted(set(b) | set(f)):
+            if b.get(field) != f.get(field):
+                problems.append(f"{name}.{field}: baseline={b.get(field)!r} "
+                                f"fresh={f.get(field)!r}")
+    return problems
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument("fresh", help="freshly generated run.py --json output")
+    args = ap.parse_args()
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    n = len(_structural_cells(baseline))
+    problems = diff(baseline, fresh)
+    if problems:
+        print(f"# structural drift vs {args.baseline} "
+              f"({len(problems)} problem(s)):")
+        for p in problems:
+            print(f"  {p}")
+        sys.exit(1)
+    print(f"# structural trajectory unchanged ({n} cells vs "
+          f"{args.baseline})")
+
+
+if __name__ == "__main__":
+    main()

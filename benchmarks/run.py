@@ -31,8 +31,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (accuracy_parity, breakdown, e2e_speedup, embedding_cache,
-                   embedding_sensitivity, roofline_report, scheduling,
-                   serving_async, serving_batching, serving_mesh,
+                   embedding_host, embedding_sensitivity, roofline_report,
+                   scheduling, serving_async, serving_batching, serving_mesh,
                    workload_allocation)
     suites = {
         "accuracy_parity": accuracy_parity,       # Table I
@@ -40,6 +40,7 @@ def main() -> None:
         "breakdown": breakdown,                   # Fig. 8
         "embedding_sensitivity": embedding_sensitivity,  # Fig. 10
         "embedding_cache": embedding_cache,       # store tiering sweep
+        "embedding_host": embedding_host,         # out-of-HBM host tier
         "workload_allocation": workload_allocation,      # Fig. 11
         "scheduling": scheduling,                 # Fig. 12/13
         "serving_batching": serving_batching,     # Fig. 7 serving policies

@@ -7,7 +7,7 @@
                       consumed by repro.serving.InferenceEngine
 
 The C2 embedding path lives in ``repro.embedding`` (re-exported here for
-convenience); ``core/fused_embedding.py`` is a deprecated import shim.
+convenience).
 """
 
 from .dual_parallel import (BRANCH_ORDERS, LEVELS, DualParallelExecutor,
@@ -15,7 +15,8 @@ from .dual_parallel import (BRANCH_ORDERS, LEVELS, DualParallelExecutor,
 from .plan import InferencePlan, PlanKey, compile_plan, place_params
 from repro.embedding import (CachedStore, DenseStore, EmbeddingStore,
                              FusedEmbeddingCollection, FusedEmbeddingSpec,
-                             StoreStats, sharded_vocab_lookup)
+                             HostBackedStore, StoreStats,
+                             sharded_vocab_lookup)
 from .opgraph import Op, FusedOp, OpGraph, fuse_non_gemm, register_fused_kernel
 from .scheduler import (breadth_first_schedule, depth_first_schedule,
                         full_order)
@@ -34,6 +35,7 @@ __all__ = [
     "EmbeddingStore",
     "DenseStore",
     "CachedStore",
+    "HostBackedStore",
     "StoreStats",
     "sharded_vocab_lookup",
     "Op",

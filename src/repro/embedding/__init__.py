@@ -3,17 +3,23 @@
   spec.py        FusedEmbeddingSpec (static schema of a fused mega-table)
   store.py       EmbeddingStore abstraction + DenseStore (monolithic tier)
   cached.py      CachedStore (hot-row cache + backing table, HugeCTR-style)
+  host.py        HostBackedStore (cache + staging on device, backing in
+                 host memory or on disk — the out-of-HBM tier)
+  prefetch.py    PrefetchPipeline (async host-side miss resolution)
   collection.py  FusedEmbeddingCollection — the lookup front-end models
                  emit graph ops against; delegates everything to its store
 
 The rest of the stack is store-agnostic: models hold a collection, plans
 place parameters via ``partition_spec()``, engines feed traffic back via
-``observe``/``refresh`` (see ``repro.serving.engine``).
+``observe``/``refresh`` (see ``repro.serving.engine``) and resolve staging
+stores' misses via ``stage``/``prefetch_hint``.
 """
 
 from .spec import FusedEmbeddingSpec
 from .store import DenseStore, EmbeddingStore, StoreStats, runtime_edge
 from .cached import CachedStore
+from .host import HostBackedStore
+from .prefetch import PrefetchPipeline, StagingOverflowError
 from .collection import FusedEmbeddingCollection, sharded_vocab_lookup
 
 __all__ = [
@@ -21,6 +27,9 @@ __all__ = [
     "EmbeddingStore",
     "DenseStore",
     "CachedStore",
+    "HostBackedStore",
+    "PrefetchPipeline",
+    "StagingOverflowError",
     "StoreStats",
     "FusedEmbeddingCollection",
     "sharded_vocab_lookup",

@@ -2,7 +2,7 @@
 
 Lives in the ``repro.embedding`` subsystem (it is the contract every
 :class:`~repro.embedding.store.EmbeddingStore` is built against);
-``repro.core.fused_embedding`` re-exports it for older import paths.
+``repro.core`` re-exports it for convenience.
 """
 
 from __future__ import annotations

@@ -13,6 +13,10 @@ the zipf skew of real CTR traffic. This module is that tier for the repro:
                       ``mega_table`` leaf, every lookup one fused gather.
   ``CachedStore``     (``repro.embedding.cached``) hot-row cache of
                       capacity C + full backing table + index map.
+  ``HostBackedStore`` (``repro.embedding.host``) hot-row cache + per-batch
+                      staging buffer on device; the backing table stays in
+                      host memory (or on disk via mmap) and misses are
+                      resolved by an async prefetch pipeline.
 
 ``FusedEmbeddingCollection`` delegates all lookups and parameter handling
 to its store, so the whole stack — ``kernels/ops.py`` →
@@ -56,10 +60,22 @@ class StoreStats:
     ``hits``/``misses`` count *row lookups* (b·k per one-hot batch) against
     the store's current index map; ``refreshes`` counts cache rebuilds.
     All zero (and staying zero) for ``DenseStore``.
+
+    The staging counters are live only for stores with ``needs_staging``:
+    ``staged_rows`` counts rows gathered host-side at serve time (synchronous
+    — the prefetch worker didn't get there first), ``prefetched_rows`` rows
+    already resolved when the batch arrived, ``h2d_bytes`` the host→device
+    staging traffic those synchronous rows cost, and ``staging_overflows``
+    batches whose miss set exceeded the staging buffer (served via the
+    chunked fallback).
     """
     hits: int = 0
     misses: int = 0
     refreshes: int = 0
+    staged_rows: int = 0
+    prefetched_rows: int = 0
+    h2d_bytes: int = 0
+    staging_overflows: int = 0
 
     @property
     def lookups(self) -> int:
@@ -90,6 +106,11 @@ class EmbeddingStore:
     #: ``refresh`` can swap them without invalidating any compiled plan.
     #: Empty for stores that never refresh (their tensors may be baked).
     runtime_keys: tuple = ()
+    #: True when the store cannot resolve every lookup from device-resident
+    #: tensors alone — the serve path must call :meth:`stage` with each
+    #: batch's ids *before* the lookup (and may call :meth:`prefetch_hint`
+    #: with upcoming batches to move that work off the critical path).
+    needs_staging: bool = False
 
     def __init__(self, spec: FusedEmbeddingSpec):
         self.spec = spec
@@ -164,6 +185,23 @@ class EmbeddingStore:
                         interpret: bool | None = None) -> jax.Array:
         """ids/mask (b, k, h) -> (b, k*d) sum-pooled."""
         raise NotImplementedError
+
+    # -- staging (only meaningful when ``needs_staging``) -------------------
+    def stage(self, params: dict, ids, mask=None) -> dict:
+        """Resolve this batch's misses into device-reachable tensors and
+        return the param subtree to serve it with. No-op pass-through for
+        stores whose device tensors already cover every row."""
+        return params
+
+    def prefetch_hint(self, ids, mask=None) -> None:
+        """Hint that ``ids`` will be served soon — staging stores resolve
+        their misses off-thread while earlier batches compute. No-op."""
+
+    def split_for_staging(self, ids) -> list:
+        """Split a batch into chunks each of which :meth:`stage` can
+        resolve — the fallback after a staging overflow. Trivial single
+        chunk for non-staging stores."""
+        return [np.asarray(ids)]
 
     # -- traffic / cache management ---------------------------------------
     def observe(self, global_rows: np.ndarray) -> None:

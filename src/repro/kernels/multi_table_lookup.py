@@ -209,6 +209,86 @@ def mtl_gather_two_level(flat_rows: jax.Array, slots: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Three-level (cache / staging / zero-guard) gather — the HostBackedStore
+# lookup
+# ---------------------------------------------------------------------------
+
+def _three_level_kernel(cslots_ref, sslots_ref, cache_ref, staging_ref,
+                        out_ref):
+    # Tier selection happened in the index maps; the body picks which of
+    # the two fetched VMEM rows (or zero) survives. There is no backing
+    # operand at all — rows resolved by neither tier gather zero, and the
+    # serve path's staging contract makes that case unreachable on a
+    # correctly staged batch.
+    p = pl.program_id(0)
+    hot = pl.num_programs(1)
+    j = pl.program_id(1)
+    cache_hit = cslots_ref[p * hot + j] >= 0
+    stage_hit = sslots_ref[p * hot + j] >= 0
+    val = jnp.where(cache_hit, cache_ref[...],
+                    jnp.where(stage_hit, staging_ref[...],
+                              jnp.zeros_like(cache_ref[...])))
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = val
+
+    @pl.when(j > 0)
+    def _acc():
+        out_ref[...] += val
+
+
+@functools.partial(jax.jit, static_argnames=("hot", "interpret"))
+def mtl_gather_three_level(cslots: jax.Array, sslots: jax.Array,
+                           cache: jax.Array, staging: jax.Array, *,
+                           hot: int = 1, interpret: bool = False
+                           ) -> jax.Array:
+    """Three-level gather: cache hits from the hot-row cache, staged misses
+    from the per-batch staging buffer, anything else zero (the guard),
+    pooled over ``hot`` ids per output row.
+
+    The out-of-HBM variant of :func:`mtl_gather_two_level`: the backing
+    table lives in *host* memory and never appears as an operand — the
+    host-side prefetch pipeline copies each batch's miss rows into
+    ``staging`` before the call. Both slot maps are scalar-prefetched, so
+    tier selection stays in the BlockSpec index maps (the wrong-tier fetch
+    is pinned to block 0 — a hot line, not a wasted HBM row) and the body
+    is a branch-free double select.
+
+    Args:
+        cslots:  (R*hot,) int32 cache slot per row, -1 = not cached.
+        sslots:  (R*hot,) int32 staging slot per row, -1 = not staged.
+        cache:   (C, d) hot-row copies.
+        staging: (S, d) this batch's staged miss rows.
+
+    Returns:
+        (R, d) gathered (hot=1) or sum-pooled (hot>1) rows.
+    """
+    rh = cslots.shape[0]
+    r = rh // hot
+    d = cache.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(r, hot),
+        in_specs=[
+            # cache hit: the row's cache slot; otherwise slot 0 (discarded)
+            pl.BlockSpec((1, d), lambda p, j, cslots, sslots:
+                         (jnp.maximum(cslots[p * hot + j], 0), 0)),
+            # staged miss: the row's staging slot; otherwise slot 0
+            pl.BlockSpec((1, d), lambda p, j, cslots, sslots:
+                         (jnp.maximum(sslots[p * hot + j], 0), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda p, j, cslots, sslots: (p, 0)),
+    )
+    return pl.pallas_call(
+        _three_level_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((r, d), cache.dtype),
+        interpret=interpret,
+    )(cslots, sslots, cache, staging)
+
+
+# ---------------------------------------------------------------------------
 # One-hot MXU variant (TPU-only; no GPU analogue)
 # ---------------------------------------------------------------------------
 

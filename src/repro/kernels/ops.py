@@ -27,6 +27,7 @@ from .fused_fm import fused_fm_second_order
 from .multi_table_lookup import (
     mtl_gather,
     mtl_gather_multihot,
+    mtl_gather_three_level,
     mtl_gather_two_level,
     mtl_input_first,
     mtl_onehot,
@@ -37,6 +38,8 @@ __all__ = [
     "multi_table_lookup_multihot",
     "multi_table_lookup_cached",
     "multi_table_lookup_cached_multihot",
+    "multi_table_lookup_host",
+    "multi_table_lookup_host_multihot",
     "fused_cross_v1",
     "fused_cross_v2",
     "fused_fm_second_order",
@@ -179,6 +182,104 @@ def multi_table_lookup_cached_multihot(ids: jax.Array, mask: jax.Array,
         slots = jnp.take(slot_of_row, rows, axis=0)
         out = mtl_gather_two_level(rows, slots, cache, backing, hot=h,
                                    interpret=interpret)
+        return out.reshape(b, k * d)
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
+def multi_table_lookup_host(ids: jax.Array, cache: jax.Array,
+                            staging: jax.Array, slot_of_row: jax.Array,
+                            staging_slot_of_row: jax.Array,
+                            offsets: jax.Array, *, strategy: str = "auto",
+                            interpret: bool | None = None) -> jax.Array:
+    """Fused lookup through an out-of-HBM (cache + staging) store.
+
+    The HostBackedStore analogue of :func:`multi_table_lookup_cached` with
+    no device backing operand: cached rows from ``cache``, this batch's
+    staged misses from ``staging``, anything else zero (the guard — the
+    serve path stages every miss first, so the guard never fires on a
+    correctly staged batch). Bit-exact with the dense path because both
+    tiers hold verbatim backing-row copies.
+
+    Args:
+        ids:                 (b, k) int32 per-field local ids.
+        cache:               (C, d) hot-row copies.
+        staging:             (S, d) staged miss rows of this batch.
+        slot_of_row:         (N,) int32 cache slot per row, -1 = uncached.
+        staging_slot_of_row: (N,) int32 staging slot per row, -1 = unstaged.
+        offsets:             (k,) int32 starting row of each table.
+
+    Returns:
+        (b, k*d) embedding output.
+    """
+    b, k = ids.shape
+    d = cache.shape[1]
+    if interpret is None:
+        interpret = not on_tpu()
+    if strategy == "auto":
+        strategy = "pallas" if on_tpu() else "jnp"
+    rows = _flat_rows(ids, offsets)
+    if strategy == "jnp":
+        out = ref.ref_three_level_gather(rows, slot_of_row,
+                                         staging_slot_of_row, cache, staging)
+    elif strategy == "pallas":
+        cslots = jnp.take(slot_of_row, rows, axis=0)
+        sslots = jnp.take(staging_slot_of_row, rows, axis=0)
+        out = mtl_gather_three_level(cslots, sslots, cache, staging,
+                                     interpret=interpret)
+    else:
+        raise ValueError(f"unknown strategy {strategy!r}")
+    return out.reshape(b, k * d)
+
+
+def multi_table_lookup_host_multihot(ids: jax.Array, mask: jax.Array,
+                                     cache: jax.Array, staging: jax.Array,
+                                     slot_of_row: jax.Array,
+                                     staging_slot_of_row: jax.Array,
+                                     offsets: jax.Array, *,
+                                     strategy: str = "auto",
+                                     interpret: bool | None = None
+                                     ) -> jax.Array:
+    """Multi-hot (pooled) fused lookup through an out-of-HBM store.
+
+    Mirrors :func:`multi_table_lookup_cached_multihot`: the jnp path masks
+    after the three-level gather, the pallas path redirects masked slots
+    to the mega-table's zero row — which pools zero from *any* tier, since
+    the zero row's value is zero in the backing and every tier holds
+    verbatim copies (and the zero-guard returns zero when it is in none).
+
+    Args:
+        ids:                 (b, k, h) local ids; invalid slots arbitrary.
+        mask:                (b, k, h) 1 for valid slots, 0 otherwise.
+        cache:               (C, d) hot-row copies.
+        staging:             (S, d) staged miss rows of this batch.
+        slot_of_row:         (N,) int32 cache index map.
+        staging_slot_of_row: (N,) int32 staging index map.
+        offsets:             (k,) table starts.
+
+    Returns:
+        (b, k*d) pooled output.
+    """
+    b, k, h = ids.shape
+    d = cache.shape[1]
+    if interpret is None:
+        interpret = not on_tpu()
+    if strategy == "auto":
+        strategy = "pallas" if on_tpu() else "jnp"
+    zero_row = slot_of_row.shape[0] - 1
+    rows = ids.astype(jnp.int32) + offsets[None, :, None].astype(jnp.int32)
+    rows = jnp.where(mask.astype(bool), rows, zero_row).reshape(-1)
+    if strategy == "jnp":
+        vals = ref.ref_three_level_gather(rows, slot_of_row,
+                                          staging_slot_of_row, cache, staging)
+        pooled = jnp.sum(vals.reshape(b, k, h, d)
+                         * mask.reshape(b, k, h, 1).astype(cache.dtype),
+                         axis=2)
+        return pooled.reshape(b, k * d)
+    if strategy == "pallas":
+        cslots = jnp.take(slot_of_row, rows, axis=0)
+        sslots = jnp.take(staging_slot_of_row, rows, axis=0)
+        out = mtl_gather_three_level(cslots, sslots, cache, staging, hot=h,
+                                     interpret=interpret)
         return out.reshape(b, k * d)
     raise ValueError(f"unknown strategy {strategy!r}")
 

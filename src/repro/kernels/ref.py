@@ -119,6 +119,39 @@ def ref_two_level_gather(flat_rows, slot_of_row, cache, backing):
     return jnp.where(hit[:, None], from_cache, from_backing)
 
 
+def ref_three_level_gather(flat_rows, slot_of_row, staging_slot_of_row,
+                           cache, staging):
+    """Three-level (cache / staging / zero-guard) gather oracle — the
+    HostBackedStore lookup.
+
+    Unlike the two-level gather there is *no device-resident backing* to
+    fall through to: rows absent from both the cache and the per-batch
+    staging buffer gather **zero** (the guard). Correctness is the serve
+    path's contract — it stages every miss before the lookup — so on a
+    correctly staged batch the result is bitwise equal to gathering from
+    the host backing (cache and staging rows are verbatim copies).
+
+    Args:
+        flat_rows:           (R,) int32 global rows.
+        slot_of_row:         (N,) int32 cache slot per row, -1 = uncached.
+        staging_slot_of_row: (N,) int32 staging slot per row, -1 = unstaged.
+        cache:               (C, d) hot-row copies.
+        staging:             (S, d) this batch's staged miss rows.
+
+    Returns:
+        (R, d) gathered rows (zero where neither tier resolves).
+    """
+    cslots = jnp.take(slot_of_row, flat_rows, axis=0)
+    sslots = jnp.take(staging_slot_of_row, flat_rows, axis=0)
+    cache_hit = cslots >= 0
+    stage_hit = jnp.logical_and(~cache_hit, sslots >= 0)
+    from_cache = jnp.take(cache, jnp.maximum(cslots, 0), axis=0)
+    from_staging = jnp.take(staging, jnp.maximum(sslots, 0), axis=0)
+    out = jnp.where(cache_hit[:, None], from_cache,
+                    jnp.where(stage_hit[:, None], from_staging, 0))
+    return out.astype(cache.dtype)
+
+
 # ---------------------------------------------------------------------------
 # Fused non-GEMM oracles (C5)
 # ---------------------------------------------------------------------------

@@ -84,6 +84,9 @@ def _engine_line(name, eng, scores, store, use_async):
     emb = (f"  emb_hit={s.emb_cache_hit_rate:.1%} "
            f"cached_traffic={s.emb_cached_traffic_fraction:.1%} "
            f"refreshes={s.emb_cache_refreshes}" if store else "")
+    if store == "host":
+        emb += (f" prefetch_hit={s.emb_prefetch_hit_rate:.1%} "
+                f"staged={s.emb_staged_rows} h2d={s.emb_h2d_bytes}B")
     mode = "async" if use_async else "sync"
     print(f"[serve:{mode}] {name}: {s.n_requests} requests in "
           f"{s.n_batches} batches  p50={s.p50_ms:.1f}ms "
@@ -115,6 +118,10 @@ def serve_ctr(args) -> None:
             from repro.embedding import CachedStore
             store = CachedStore(spec.embedding_spec(),
                                 capacity=args.cache_capacity)
+        elif args.store == "host":
+            from repro.embedding import HostBackedStore
+            store = HostBackedStore(spec.embedding_spec(),
+                                    capacity=args.cache_capacity)
         rt.add_model(name, model, params, level=args.level,
                      policy=_make_policy(args), store=store,
                      refresh_every=args.refresh_every)
@@ -143,7 +150,8 @@ def serve_ctr(args) -> None:
 
     for name in names:
         _engine_line(name, rt.engine(name), scores[name],
-                     args.store == "cached", args.use_async)
+                     args.store if args.store != "dense" else None,
+                     args.use_async)
     if len(names) > 1:
         agg = rt.stats()
         print(f"[serve:runtime] {agg.n_models} models  "
@@ -189,10 +197,12 @@ def main() -> None:
                     help="device mesh for multi-chip serving, e.g. "
                          "'data=8' or 'data=4,model=2' (batches shard "
                          "over data, embedding tables over model)")
-    ap.add_argument("--store", default="dense", choices=["dense", "cached"],
-                    help="embedding store tier (repro.embedding)")
+    ap.add_argument("--store", default="dense",
+                    choices=["dense", "cached", "host"],
+                    help="embedding store tier (repro.embedding); 'host' "
+                         "keeps the backing table out of device memory")
     ap.add_argument("--cache-capacity", type=int, default=65536,
-                    help="hot-row capacity C for --store cached")
+                    help="hot-row capacity C for --store cached/host")
     ap.add_argument("--refresh-every", type=int, default=None,
                     help="per-engine: rebuild the hot cache every N served "
                          "batches (plan cache survives — tensor swap)")

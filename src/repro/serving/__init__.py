@@ -9,8 +9,8 @@ engine, shared admission cadence).
 
 from .batching import (BatchDecision, BatchPolicy, BucketedBatch, FixedBatch,
                        TimeoutBatch)
-from .engine import (CTRServingEngine, EngineStats, InferenceEngine,
-                     QueueFullError, RequestFuture, ServeStats)
+from .engine import (EngineStats, InferenceEngine, QueueFullError,
+                     RequestFuture)
 from .runtime import RuntimeStats, ServingRuntime
 from .generate import generate
 
@@ -26,7 +26,5 @@ __all__ = [
     "FixedBatch",
     "BucketedBatch",
     "TimeoutBatch",
-    "CTRServingEngine",
-    "ServeStats",
     "generate",
 ]

@@ -33,19 +33,26 @@ The engine owns
   a double-buffered tensor swap — build the new cache tensors on the
   side, publish them in one atomic reference swap — and the entire plan
   cache survives with zero recompiles (HugeCTR's online cache refresh
-  over DPIFrame plans).
-
-``CTRServingEngine`` (the old fixed-batch surface) remains as a deprecated
-shim: ``InferenceEngine`` with ``FixedBatch(batch_size)``.
+  over DPIFrame plans);
+* the **staging pipeline** for out-of-HBM stores
+  (``store=HostBackedStore(...)``, ``EmbeddingStore.needs_staging``):
+  before each batch's compute the engine has the store resolve the
+  batch's cache misses into the device staging buffer (``store.stage`` —
+  published through the same runtime-tensor swap, zero recompiles), and
+  while that batch computes it hints the *next* queued batch's ids to the
+  store's async prefetch worker so the host-side gather runs off the
+  critical path. A miss set too big for the staging buffer falls back to
+  serving the batch in chunks through the same plan — slower, never
+  wrong.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import math
 import threading
 import time
-import warnings
 from collections import deque
 from typing import Callable, Sequence
 
@@ -54,10 +61,11 @@ import jax
 
 from repro.core.plan import (InferencePlan, PlanKey, compile_plan,
                              place_params, plan_key_for)
-from .batching import BatchPolicy, BucketedBatch, FixedBatch
+from repro.embedding import StagingOverflowError
+from .batching import BatchPolicy, BucketedBatch
 
 __all__ = ["InferenceEngine", "EngineStats", "RequestFuture",
-           "QueueFullError", "CTRServingEngine", "ServeStats"]
+           "QueueFullError"]
 
 
 class QueueFullError(RuntimeError):
@@ -160,11 +168,16 @@ class EngineStats:
     (their futures fail with :class:`QueueFullError`).
 
     The ``emb_*`` counters mirror the engine's embedding store
-    (``CachedStore``): row-lookup hits/misses against the current index
-    map, cache rebuilds, and the fraction of observed traffic mass whose
-    rows are currently cached (the fraction is a full-vocabulary scan, so
-    it is refreshed at ``refresh_cache`` time, not per batch). All zero
-    for the default ``DenseStore``.
+    (``CachedStore``/``HostBackedStore``): row-lookup hits/misses against
+    the current index map, cache rebuilds, and the fraction of observed
+    traffic mass whose rows are currently cached (the fraction is a
+    full-vocabulary scan, so it is refreshed at ``refresh_cache`` time,
+    not per batch). The staging four (``emb_staged_rows`` — rows gathered
+    host-side synchronously at serve time, ``emb_prefetched_rows`` — miss
+    rows the async worker had already resolved, ``emb_h2d_bytes`` — host→
+    device staging traffic, ``emb_staging_overflows`` — batches served via
+    the chunked fallback) are live only for ``needs_staging`` stores. All
+    zero for the default ``DenseStore``.
     """
     n_requests: int = 0
     n_batches: int = 0
@@ -182,6 +195,10 @@ class EngineStats:
     emb_cache_misses: int = 0
     emb_cache_refreshes: int = 0
     emb_cached_traffic_fraction: float = 0.0
+    emb_staged_rows: int = 0
+    emb_prefetched_rows: int = 0
+    emb_h2d_bytes: int = 0
+    emb_staging_overflows: int = 0
 
     def __post_init__(self):
         self.latency_ms = deque(self.latency_ms or (),
@@ -214,9 +231,14 @@ class EngineStats:
             n = self.emb_cache_hits + self.emb_cache_misses
             return self.emb_cache_hits / n if n else 0.0
 
-
-# deprecated alias — the old engine exported its stats under this name
-ServeStats = EngineStats
+    @property
+    def emb_prefetch_hit_rate(self) -> float:
+        """Fraction of staged miss rows the async prefetch worker resolved
+        before the batch reached the serve path (1.0 = the host gather is
+        entirely off the critical path)."""
+        with self.lock:
+            n = self.emb_staged_rows + self.emb_prefetched_rows
+            return self.emb_prefetched_rows / n if n else 0.0
 
 
 class InferenceEngine:
@@ -303,6 +325,11 @@ class InferenceEngine:
         self._running = False
         self.worker_error: BaseException | None = None
         self.stats = EngineStats(latency_window=latency_window)
+        staging = self._staging_store
+        if staging is not None and mesh is not None:
+            # stage-time publishes must land mesh-placed like everything
+            # else in self.params (refresh already goes through place())
+            staging.bind_mesh(mesh)
 
     # -- embedding store -----------------------------------------------------
     @property
@@ -329,11 +356,73 @@ class InferenceEngine:
         if coll is None or not coll.store.refreshable:
             return
         coll.observe(rows)
-        st, ss = self.stats, coll.store.stats
+        self._mirror_store_stats()
+
+    def _mirror_store_stats(self) -> None:
+        ss = self.store.stats
+        st = self.stats
         with st.lock:
             st.emb_cache_hits = ss.hits
             st.emb_cache_misses = ss.misses
             st.emb_cache_refreshes = ss.refreshes
+            st.emb_staged_rows = ss.staged_rows
+            st.emb_prefetched_rows = ss.prefetched_rows
+            st.emb_h2d_bytes = ss.h2d_bytes
+            st.emb_staging_overflows = ss.staging_overflows
+
+    # -- staging (out-of-HBM stores) ----------------------------------------
+    @property
+    def _staging_store(self):
+        """The embedding store when it needs per-batch staging, else None."""
+        store = self.store
+        if store is not None and getattr(store, "needs_staging", False):
+            return store
+        return None
+
+    def _predict_staged(self, plan: InferencePlan, rows: np.ndarray
+                        ) -> np.ndarray:
+        """Run ``plan.predict`` with every embedding miss of ``rows``
+        resolved first. Caller holds ``_drain_lock`` (staging republishes
+        ``self.params`` and must not race a refresh).
+
+        Fast path: one ``store.stage`` (mostly prefetch hits) + one
+        predict. A :class:`StagingOverflowError` — the batch's distinct
+        miss set exceeds the staging buffer — falls back to the
+        synchronous chunked host gather: ``split_for_staging`` cuts the
+        batch so every chunk's misses fit, and each chunk is staged and
+        served through the *same* compiled plan (which pads each chunk to
+        the bucket shape). Slower, never wrong.
+        """
+        store = self._staging_store
+        if store is None:
+            return plan.predict(rows)
+        key = getattr(self.model, "main_embedding_key", "emb")
+        try:
+            staged = store.stage(self.params[key], rows)
+        except StagingOverflowError:
+            self._mirror_store_stats()
+            outs = []
+            for chunk in store.split_for_staging(rows):
+                staged = store.stage(self.params[key], chunk)
+                self.params = {**self.params, key: staged}
+                outs.append(plan.predict(chunk))
+            self._mirror_store_stats()
+            return np.concatenate(outs)
+        self.params = {**self.params, key: staged}
+        self._mirror_store_stats()
+        return plan.predict(rows)
+
+    def _hint_upcoming(self, limit: int = 4096) -> None:
+        """Hand the still-queued requests' ids (batch t+1 while batch t is
+        about to compute) to the store's async prefetch worker."""
+        store = self._staging_store
+        if store is None:
+            return
+        with self._cv:
+            upcoming = [row for _, row, _ in
+                        itertools.islice(self._queue, limit)]
+        if upcoming:
+            store.prefetch_hint(np.stack(upcoming))
 
     def refresh_cache(self) -> None:
         """Re-admit hot rows from observed traffic into the store's cache.
@@ -551,11 +640,16 @@ class InferenceEngine:
                     rows = np.stack([it[1] for it in items])
                     self._observe_traffic(rows)
                     plan = self.plan_for(decision.bucket)
+                    # batch t+1's ids go to the async prefetch worker now,
+                    # so its host-side miss gather overlaps batch t's
+                    # stage+compute below (no-op for non-staging stores)
+                    self._hint_upcoming()
                     t0 = time.perf_counter()
                     # plan.predict pads to the bucket shape and slices the
                     # padding back off — one output transform shared with
-                    # the one-shot path
-                    scores = plan.predict(rows)
+                    # the one-shot path; _predict_staged resolves staging
+                    # stores' misses first (pass-through otherwise)
+                    scores = self._predict_staged(plan, rows)
                     t1 = time.perf_counter()
                 except Exception as exc:
                     for _, _, fut in items:
@@ -593,23 +687,13 @@ class InferenceEngine:
         if b > largest:
             return np.concatenate([self.predict(ids[i:i + largest])
                                    for i in range(0, b, largest)])
+        bucket = min(bk for bk in self.policy.buckets if bk >= b)
+        if self._staging_store is not None:
+            # staging republishes self.params — hold the drain lock across
+            # observe+stage+predict so a concurrent refresh can't interleave
+            with self._drain_lock:
+                self._observe_traffic(ids)
+                return self._predict_staged(self.plan_for(bucket), ids)
         with self._drain_lock:    # observe never races a refresh/drain
             self._observe_traffic(ids)
-        bucket = min(bk for bk in self.policy.buckets if bk >= b)
         return self.plan_for(bucket).predict(ids)
-
-
-class CTRServingEngine(InferenceEngine):
-    """Deprecated fixed-batch surface — use ``InferenceEngine`` with a
-    batching policy from ``repro.serving.batching`` instead."""
-
-    def __init__(self, model, params, *, batch_size: int = 256,
-                 level: str = "dual", branch_order: str = "longer_first"):
-        warnings.warn(
-            "CTRServingEngine is deprecated; use InferenceEngine(model, "
-            "params, policy=FixedBatch(batch_size)) — or BucketedBatch for "
-            "lower padding waste.", DeprecationWarning, stacklevel=2)
-        super().__init__(model, params, level=level,
-                         branch_order=branch_order,
-                         policy=FixedBatch(batch_size))
-        self.batch_size = batch_size

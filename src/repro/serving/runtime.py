@@ -64,6 +64,10 @@ class RuntimeStats:
     cache_hits: int
     cache_misses: int
     emb_cache_refreshes: int
+    emb_staged_rows: int
+    emb_prefetched_rows: int
+    emb_h2d_bytes: int
+    emb_staging_overflows: int
     per_model: dict[str, EngineStats]
 
 
@@ -212,7 +216,9 @@ class ServingRuntime:
         """Aggregate snapshot across engines (see :class:`RuntimeStats`)."""
         lat: list[float] = []
         tot = dict(n_requests=0, n_batches=0, n_rejected=0, queue_depth=0,
-                   cache_hits=0, cache_misses=0, emb_cache_refreshes=0)
+                   cache_hits=0, cache_misses=0, emb_cache_refreshes=0,
+                   emb_staged_rows=0, emb_prefetched_rows=0, emb_h2d_bytes=0,
+                   emb_staging_overflows=0)
         for eng in self._engines.values():
             st = eng.stats
             with st.lock:
@@ -224,6 +230,10 @@ class ServingRuntime:
                 tot["cache_hits"] += st.cache_hits
                 tot["cache_misses"] += st.cache_misses
                 tot["emb_cache_refreshes"] += st.emb_cache_refreshes
+                tot["emb_staged_rows"] += st.emb_staged_rows
+                tot["emb_prefetched_rows"] += st.emb_prefetched_rows
+                tot["emb_h2d_bytes"] += st.emb_h2d_bytes
+                tot["emb_staging_overflows"] += st.emb_staging_overflows
         return RuntimeStats(
             n_models=len(self._engines),
             p50_ms=float(np.percentile(lat, 50)) if lat else 0.0,

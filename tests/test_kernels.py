@@ -195,6 +195,93 @@ def test_two_level_multihot_matches_dense(h):
 
 
 # ---------------------------------------------------------------------------
+# three-level (cache / staging / zero-guard) gather
+# ---------------------------------------------------------------------------
+
+def _split_tiers(rng, mega, capacity, staged):
+    """Disjoint cache + staging over ``mega``'s rows, plus both slot maps
+    (rows in neither tier keep -1 in both — the zero-guard case)."""
+    n = mega.shape[0]
+    pick = rng.choice(n, size=capacity + staged, replace=False)
+    hot, warm = np.sort(pick[:capacity]), np.sort(pick[capacity:])
+    slot_of_row = np.full(n, -1, dtype=np.int32)
+    slot_of_row[hot] = np.arange(capacity, dtype=np.int32)
+    smap = np.full(n, -1, dtype=np.int32)
+    smap[warm] = np.arange(staged, dtype=np.int32)
+    cache = jnp.take(mega, jnp.asarray(hot), axis=0)
+    staging = jnp.take(mega, jnp.asarray(warm), axis=0)
+    return cache, staging, jnp.asarray(slot_of_row), jnp.asarray(smap)
+
+
+@pytest.mark.parametrize("capacity", [1, 16, 40])
+def test_three_level_gather_matches_dense_when_fully_staged(capacity):
+    """Every row in some tier -> bitwise equal to the dense gather (the
+    HostBackedStore contract: the serve path stages all misses first)."""
+    rng = np.random.default_rng(capacity)
+    sizes, d, b = [13, 29, 6], 16, 24
+    _, mega, offsets = make_tables(rng, sizes, d, jnp.float32)
+    cache, staging, slot_of_row, smap = _split_tiers(
+        rng, mega, capacity, mega.shape[0] - capacity)   # all rows covered
+    ids = jnp.asarray(
+        np.stack([rng.integers(0, n, size=b) for n in sizes], axis=1),
+        dtype=jnp.int32)
+    want = ops.multi_table_lookup(ids, mega, offsets, strategy="jnp")
+    got = ops.multi_table_lookup_host(ids, cache, staging, slot_of_row,
+                                      smap, offsets, strategy="jnp")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    got_pl = ops.multi_table_lookup_host(ids, cache, staging, slot_of_row,
+                                         smap, offsets, strategy="pallas",
+                                         interpret=True)
+    np.testing.assert_array_equal(np.asarray(got_pl), np.asarray(want))
+
+
+def test_three_level_gather_zero_guards_unresolved_rows():
+    rng = np.random.default_rng(0)
+    sizes, d, b = [13, 29, 6], 16, 24
+    _, mega, offsets = make_tables(rng, sizes, d, jnp.float32)
+    cache, staging, slot_of_row, smap = _split_tiers(rng, mega, 8, 8)
+    ids = jnp.asarray(
+        np.stack([rng.integers(0, n, size=b) for n in sizes], axis=1),
+        dtype=jnp.int32)
+    for strategy in ("jnp", "pallas"):
+        got = np.asarray(ops.multi_table_lookup_host(
+            ids, cache, staging, slot_of_row, smap, offsets,
+            strategy=strategy, interpret=True)).reshape(b, len(sizes), d)
+        rows = np.asarray(ids) + np.asarray(offsets)[None, :]
+        unresolved = ((np.asarray(slot_of_row)[rows] < 0)
+                      & (np.asarray(smap)[rows] < 0))
+        assert unresolved.any()
+        assert np.all(got[unresolved] == 0.0)
+        want = np.asarray(ops.multi_table_lookup(
+            ids, mega, offsets, strategy="jnp")).reshape(b, len(sizes), d)
+        np.testing.assert_array_equal(got[~unresolved], want[~unresolved])
+
+
+@pytest.mark.parametrize("h", [1, 3])
+def test_three_level_multihot_matches_dense(h):
+    rng = np.random.default_rng(h)
+    sizes, d, b = [13, 29, 6], 16, 12
+    k = len(sizes)
+    _, mega, offsets = make_tables(rng, sizes, d, jnp.float32)
+    mega_z = jnp.concatenate([mega, jnp.zeros((1, d), jnp.float32)], axis=0)
+    cache, staging, slot_of_row, smap = _split_tiers(
+        rng, mega_z, 16, mega_z.shape[0] - 16)           # all rows covered
+    ids = jnp.asarray(
+        np.stack([rng.integers(0, n, size=(b, h)) for n in sizes], axis=1),
+        dtype=jnp.int32)
+    mask = jnp.asarray(rng.integers(0, 2, size=(b, k, h)), dtype=jnp.float32)
+    # compare per strategy: jnp and pallas pool in different f32 orders
+    for strategy in ("jnp", "pallas"):
+        want = ops.multi_table_lookup_multihot(ids, mask, mega_z, offsets,
+                                               strategy=strategy,
+                                               interpret=True)
+        got = ops.multi_table_lookup_host_multihot(
+            ids, mask, cache, staging, slot_of_row, smap, offsets,
+            strategy=strategy, interpret=True)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
 # fused non-GEMM kernels
 # ---------------------------------------------------------------------------
 

@@ -196,11 +196,10 @@ def test_one_shot_predict_chunks_oversize_batches():
     np.testing.assert_allclose(scores, direct, rtol=1e-5, atol=1e-5)
 
 
-def test_deprecated_engine_still_serves():
-    from repro.serving import CTRServingEngine
+def test_fixed_batch_engine_serves():
+    # the surface that replaced the removed CTRServingEngine shim
     model, params = make()
-    with pytest.warns(DeprecationWarning):
-        eng = CTRServingEngine(model, params, batch_size=32, level="dual")
+    eng = InferenceEngine(model, params, policy=FixedBatch(32), level="dual")
     eng.warmup()
     rows = rows_of(50)
     eng.submit_many(rows)

@@ -5,8 +5,8 @@ stamps), the background worker draining a ``TimeoutBatch`` SLO without
 caller polling, refresh-without-recompile (plan-cache keys identical, zero
 new compiles, bit-exact vs ``DenseStore`` across ≥2 refreshes under zipf
 traffic), thread-safe stats with ``queue_depth``, the multi-model
-``ServingRuntime`` router, and the deprecated ``core.fused_embedding``
-import shim.
+``ServingRuntime`` router, and the absence of the removed deprecated
+surfaces (``core.fused_embedding``, ``CTRServingEngine``).
 """
 
 import importlib
@@ -415,23 +415,15 @@ def test_runtime_shared_admission_refreshes_all_stores():
         assert rt.engine(n).stats.cache_misses == 1
 
 
-# --- deprecated shim (ISSUE-3 satellite) -------------------------------------
+# --- removed deprecated surfaces (ISSUE-6 satellite) -------------------------
 
-def test_fused_embedding_shim_warns_on_import():
+def test_deprecated_surfaces_are_gone():
+    """The fused_embedding shim and the CTRServingEngine alias were removed
+    — only the real surfaces (repro.embedding, InferenceEngine + policies)
+    remain importable."""
     sys.modules.pop("repro.core.fused_embedding", None)
-    with pytest.warns(DeprecationWarning, match="repro.embedding"):
-        mod = importlib.import_module("repro.core.fused_embedding")
-    # shim still re-exports the full surface
-    from repro.embedding import CachedStore as real
-    assert mod.CachedStore is real
-
-
-def test_core_import_does_not_touch_shim():
-    """repro.core must not trigger the deprecation path anymore — in-repo
-    callers are routed straight to repro.embedding."""
-    sys.modules.pop("repro.core.fused_embedding", None)
-    import warnings as w
-    with w.catch_warnings():
-        w.simplefilter("error", DeprecationWarning)
-        importlib.reload(importlib.import_module("repro.core"))
-    assert "repro.core.fused_embedding" not in sys.modules
+    with pytest.raises(ImportError):
+        importlib.import_module("repro.core.fused_embedding")
+    import repro.serving as serving
+    assert not hasattr(serving, "CTRServingEngine")
+    assert not hasattr(serving, "ServeStats")

@@ -135,9 +135,9 @@ def test_checkpoint_atomicity(tmp_path):
 
 
 def test_serving_engine_batches_and_pads():
-    from repro.serving import CTRServingEngine
+    from repro.serving import FixedBatch, InferenceEngine
     model, params = make("widedeep")
-    eng = CTRServingEngine(model, params, batch_size=32, level="dual")
+    eng = InferenceEngine(model, params, policy=FixedBatch(32), level="dual")
     eng.warmup()
     rng = np.random.default_rng(0)
     n = 50   # 32 + 18 (padded partial batch)
