@@ -72,6 +72,13 @@ def main() -> None:
         sys.exit(1)
     print(f"# structural trajectory unchanged ({n} cells vs "
           f"{args.baseline})")
+    # surface the pinned bytes-moved ratios (quantized vs fp32 wire format)
+    for name, s in sorted(_structural_cells(baseline).items()):
+        ratios = {k: v for k, v in sorted(s.items())
+                  if k.endswith("_ratio")}
+        if ratios:
+            print(f"# bytes-moved {name}: " +
+                  ",".join(f"{k}={v}" for k, v in ratios.items()))
 
 
 if __name__ == "__main__":

@@ -38,11 +38,12 @@ def _traffic(key, n_batches: int, batch: int, field_sizes, exponent: float):
 
 
 def _cell(spec: FusedEmbeddingSpec, capacity: int, exponent: float,
-          batch: int, warm_batches: int, tag: str) -> dict:
+          batch: int, warm_batches: int, tag: str,
+          row_dtype: str | None = None) -> dict:
     key = jax.random.PRNGKey(0)
     dense = FusedEmbeddingCollection(spec)
     params_d = dense.init(key)
-    store = CachedStore(spec, capacity=capacity)
+    store = CachedStore(spec, capacity=capacity, row_dtype=row_dtype)
     cached = FusedEmbeddingCollection(spec, store=store)
     params_c = store.from_dense(params_d)        # same table, tiered layout
 
@@ -65,15 +66,24 @@ def _cell(spec: FusedEmbeddingSpec, capacity: int, exponent: float,
     # executable as multi-GB constants)
     f_dense = jax.jit(lambda p, i: dense.apply(p, i))
     f_cached = jax.jit(lambda p, i: cached.apply(p, i))
+    if row_dtype is not None:
+        # lossy int8 rows: tolerance gate instead of the fp32 bit-exactness
+        np.testing.assert_allclose(np.asarray(f_cached(params_c, ids)),
+                                   np.asarray(f_dense(params_d, ids)),
+                                   rtol=0, atol=1e-2)
     td = time_fn(f_dense, params_d, ids, reps=3, warmup=1)
     tc = time_fn(f_cached, params_c, ids, reps=3, warmup=1)
     ctf = store.cached_traffic_fraction
     emit(f"emb_cache/{tag}/dense", td)
     emit(f"emb_cache/{tag}/cached", tc,
          f"hit_rate={hit_rate:.3f},cached_traffic={ctf:.3f},"
-         f"refreshes={store.stats.refreshes}")
+         f"refreshes={store.stats.refreshes},"
+         f"gather={store.stats.gather_bytes}B")
     return {"hit_rate": hit_rate, "cached_traffic": ctf,
-            "dense_us": td, "cached_us": tc}
+            "dense_us": td, "cached_us": tc,
+            "row_dtype": row_dtype or "fp32",
+            "wire_row_bytes": int(store.wire_row_bytes),
+            "gather_bytes": int(store.stats.gather_bytes)}
 
 
 def run(quick: bool = False, dry: bool = False) -> dict:
@@ -94,6 +104,20 @@ def run(quick: bool = False, dry: bool = False) -> dict:
             skew = "uniform" if e == 0.0 else f"zipf{e}"
             out[f"C{cap}_{skew}"] = _cell(spec, cap, e, batch, warm,
                                           f"C{cap}/{skew}")
+
+    # fp32-vs-int8 twin at d=32: same traffic through the same capacity,
+    # wire bytes 128 vs 36 per row — the cached tier's bytes-moved column
+    spec32 = FusedEmbeddingSpec(field_sizes=(n,) * k, dim=32)
+    cap, e = capacities[0], exponents[-1]
+    twin = {}
+    for rd in (None, "int8"):
+        mode = rd or "fp32"
+        twin[mode] = _cell(spec32, cap, e, batch, warm,
+                           f"C{cap}/zipf{e}/d32/{mode}", row_dtype=rd)
+        out[f"q8_twin_d32_{mode}"] = twin[mode]
+    ratio = twin["fp32"]["gather_bytes"] / twin["int8"]["gather_bytes"]
+    assert ratio >= 3.5, twin
+    out["q8_twin_d32"] = {"gather_ratio": round(ratio, 6)}
     return out
 
 

@@ -24,15 +24,29 @@ rebuilds the cache with the C most frequent rows (deterministic tie-break
 by row id). Until the first refresh the cache seeds with the lowest C row
 ids — the right prior for CTR id streams, where popular items cluster at
 small ids (both the synthetic quadratic skew and zipf traffic do).
+
+Quantized tier (``row_dtype="int8"``): both tiers hold int8 rows with one
+fp32 scale per row (``backing_scale (rows, 1)`` / ``cache_scale (C, 1)``,
+symmetric absmax via ``repro.quant``), quantized **once** at init/adopt —
+cache rows stay verbatim copies of quantized backing rows, so tier choice
+still never changes values *within the int8 representation*; what relaxes
+is fp32 bit-exactness (round-trip error ≤ scale/2 per element, gated
+model-level by ``benchmarks/accuracy_parity.py --quant``). The gather
+moves ``d + 4`` bytes per row instead of ``4·d`` and dequantizes in-kernel
+(``mtl_gather_two_level_q8``). Scales are runtime inputs like everything
+else, so refresh stays recompile-free.
 """
 
 from __future__ import annotations
+
+import dataclasses
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import quant
 from repro.kernels import ops as kops
 
 from .spec import FusedEmbeddingSpec
@@ -66,13 +80,21 @@ class CachedStore(EmbeddingStore):
     refreshable = True
     runtime_keys = ("cache", "backing", "slot_of_row")
 
-    def __init__(self, spec: FusedEmbeddingSpec, capacity: int):
+    def __init__(self, spec: FusedEmbeddingSpec, capacity: int,
+                 row_dtype: str | None = None):
+        if row_dtype is not None:
+            spec = dataclasses.replace(spec, row_dtype=row_dtype)
         super().__init__(spec)
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         self.capacity = int(min(capacity, spec.rows))
         self._counts = np.zeros(spec.rows, dtype=np.int64)
         self._slot_of_row = self._seed_map()
+        if self.quantized:
+            # scales are plan runtime inputs exactly like their rows, so a
+            # refresh republishes them through the same recompile-free swap
+            self.runtime_keys = ("cache", "cache_scale", "backing",
+                                 "backing_scale", "slot_of_row")
 
     def _seed_map(self) -> np.ndarray:
         m = np.full(self.spec.rows, -1, dtype=np.int32)
@@ -85,40 +107,82 @@ class CachedStore(EmbeddingStore):
 
     def from_dense(self, dense_params: dict) -> dict:
         """Adopt a DenseStore subtree (``{"mega_table": table}``) into the
-        tiered layout, caching per the store's current index map."""
+        tiered layout, caching per the store's current index map. Quantized
+        stores quantize the whole table here, **once** — every later
+        refresh reuses these rows/scales, so tier contents stay verbatim
+        copies of one quantization."""
         backing = dense_params["mega_table"]
-        return self._with_cache(backing, self._slot_of_row)
+        backing_scale = None
+        if self.quantized:
+            backing, backing_scale = self._quantize_table(backing)
+        return self._with_cache(backing, self._slot_of_row, backing_scale)
 
     def adopt(self, params: dict) -> dict:
-        if "backing" in params:
-            return self._with_cache(params["backing"], self._slot_of_row)
-        return self.from_dense(params)
+        if "backing" not in params:
+            return self.from_dense(params)
+        backing = params["backing"]
+        if self.quantized and backing.dtype != jnp.int8:
+            backing, backing_scale = self._quantize_table(backing)
+        else:
+            backing_scale = params.get("backing_scale")
+        return self._with_cache(backing, self._slot_of_row, backing_scale)
 
-    def _with_cache(self, backing: jax.Array,
-                    slot_of_row: np.ndarray) -> dict:
+    def _quantize_table(self, table: jax.Array
+                        ) -> tuple[jax.Array, jax.Array]:
+        q, scale = quant.quantize_rows(table)
+        self.stats.quant_rows += int(table.shape[0])
+        return q, scale
+
+    def _with_cache(self, backing: jax.Array, slot_of_row: np.ndarray,
+                    backing_scale: jax.Array | None = None) -> dict:
         hot = np.flatnonzero(slot_of_row >= 0)
         cached_rows = hot[np.argsort(slot_of_row[hot])]   # row of slot s
         if cached_rows.size != self.capacity:
             raise ValueError(f"index map holds {cached_rows.size} slots, "
                              f"capacity is {self.capacity}")
-        return {"backing": backing,
-                "cache": jnp.take(backing, jnp.asarray(cached_rows), axis=0),
-                "slot_of_row": jnp.asarray(slot_of_row)}
+        rows = jnp.asarray(cached_rows)
+        out = {"backing": backing,
+               "cache": jnp.take(backing, rows, axis=0),
+               "slot_of_row": jnp.asarray(slot_of_row)}
+        if self.quantized:
+            if backing_scale is None:
+                raise ValueError("quantized store needs backing_scale "
+                                 "alongside its int8 backing")
+            out["backing_scale"] = backing_scale
+            out["cache_scale"] = jnp.take(backing_scale, rows, axis=0)
+        return out
 
     def partition_spec(self, model_axis: str | None = "model") -> dict:
-        """Backing row-sharded (vocab-parallel); the hot cache and the
-        index map are small and latency-critical — replicated."""
-        return {"backing": P(model_axis, None),
+        """Backing row-sharded (vocab-parallel); the hot cache, the index
+        map, and the per-row scales are small and latency-critical —
+        replicated (scales placed like ``slot_of_row``)."""
+        spec = {"backing": P(model_axis, None),
                 "cache": P(),
                 "slot_of_row": P()}
+        if self.quantized:
+            spec["backing_scale"] = P()
+            spec["cache_scale"] = P()
+        return spec
 
     def dense_view(self, params: dict) -> jax.Array:
+        if self.quantized:
+            # the naive level / serial baselines want fp32 rows — rebuild
+            # them from the int8 grid so every path sees identical values
+            return quant.dequantize_rows(
+                params["backing"], params["backing_scale"]).astype(
+                    jnp.dtype(self.spec.dtype))
         return params["backing"]
 
     # -- lookup ------------------------------------------------------------
     def lookup(self, params: dict, ids: jax.Array, offsets: jax.Array, *,
                strategy: str = "auto",
                interpret: bool | None = None) -> jax.Array:
+        if self.quantized:
+            return kops.multi_table_lookup_cached_q8(
+                ids, params["cache"], params["cache_scale"],
+                params["backing"], params["backing_scale"],
+                params["slot_of_row"], offsets,
+                strategy=strategy, interpret=interpret)
         return kops.multi_table_lookup_cached(
             ids, params["cache"], params["backing"], params["slot_of_row"],
             offsets, strategy=strategy, interpret=interpret)
@@ -126,6 +190,12 @@ class CachedStore(EmbeddingStore):
     def lookup_multihot(self, params: dict, ids: jax.Array, mask: jax.Array,
                         offsets: jax.Array, *, strategy: str = "auto",
                         interpret: bool | None = None) -> jax.Array:
+        if self.quantized:
+            return kops.multi_table_lookup_cached_q8_multihot(
+                ids, mask, params["cache"], params["cache_scale"],
+                params["backing"], params["backing_scale"],
+                params["slot_of_row"], offsets,
+                strategy=strategy, interpret=interpret)
         return kops.multi_table_lookup_cached_multihot(
             ids, mask, params["cache"], params["backing"],
             params["slot_of_row"], offsets,
@@ -142,6 +212,7 @@ class CachedStore(EmbeddingStore):
         hits = int((self._slot_of_row[rows] >= 0).sum())
         self.stats.hits += hits
         self.stats.misses += rows.size - hits
+        self._observe_traffic(rows)
 
     def refresh(self, params: dict) -> dict:
         """Re-admit the C most frequent observed rows (ties -> lower row id
@@ -152,7 +223,8 @@ class CachedStore(EmbeddingStore):
         new_map[hot] = np.arange(self.capacity, dtype=np.int32)
         self._slot_of_row = new_map
         self.stats.refreshes += 1
-        return self._with_cache(params["backing"], new_map)
+        return self._with_cache(params["backing"], new_map,
+                                params.get("backing_scale"))
 
     @property
     def cached_traffic_fraction(self) -> float:
@@ -166,5 +238,6 @@ class CachedStore(EmbeddingStore):
         return float(self._counts[self._slot_of_row >= 0].sum()) / total
 
     def describe(self) -> str:
+        q = ",int8" if self.quantized else ""
         return (f"cached(C={self.capacity},rows={self.spec.rows},"
-                f"d={self.spec.dim})")
+                f"d={self.spec.dim}{q})")

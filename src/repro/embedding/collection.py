@@ -20,6 +20,8 @@ serves LM vocab embeddings (a 1-table degenerate case).
 
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -42,7 +44,10 @@ class FusedEmbeddingCollection:
                  store: EmbeddingStore | None = None):
         self.spec = spec
         self.store = store if store is not None else DenseStore(spec)
-        if self.store.spec != spec:
+        # row_dtype is the store's wire-format choice, not part of the
+        # model's schema — two specs differing only there are compatible
+        if dataclasses.replace(self.store.spec, row_dtype=None) != \
+                dataclasses.replace(spec, row_dtype=None):
             raise ValueError("store was built for a different embedding "
                              f"spec: {self.store.spec} != {spec}")
         self._offsets = jnp.asarray(spec.offsets)

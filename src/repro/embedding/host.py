@@ -35,6 +35,7 @@ but never wrong.
 
 from __future__ import annotations
 
+import dataclasses
 import os
 
 import numpy as np
@@ -42,6 +43,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import quant
 from repro.kernels import ops as kops
 
 from .prefetch import PrefetchPipeline, StagingOverflowError
@@ -65,6 +67,14 @@ class HostBackedStore(EmbeddingStore):
             is a ``np.memmap`` of this file instead of a RAM array. Create
             via :meth:`init`/:meth:`adopt` (writes the table), reopen an
             existing file with :meth:`open`.
+        row_dtype: ``"int8"`` stores all three tiers quantized (symmetric
+            absmax, one fp32 scale per row — ``repro.quant``): the host
+            backing is int8 + an ``(rows, 1)`` scale column (the mmap tier
+            writes the scales to a ``backing_path + ".scale"`` sidecar),
+            the staging pipeline moves ``d + 4`` bytes per resolved row
+            instead of ``4·d``, and the gather dequantizes in-kernel
+            (``mtl_gather_three_level_q8``). Default ``None`` keeps the
+            bit-exact full-precision tiers.
 
     The param subtree holds **only the four device tensors**; the backing
     lives on the store object itself (``host_view()``), which is exactly
@@ -80,7 +90,10 @@ class HostBackedStore(EmbeddingStore):
 
     def __init__(self, spec: FusedEmbeddingSpec, capacity: int,
                  staging_capacity: int | None = None,
-                 backing_path: str | os.PathLike | None = None):
+                 backing_path: str | os.PathLike | None = None,
+                 row_dtype: str | None = None):
+        if row_dtype is not None:
+            spec = dataclasses.replace(spec, row_dtype=row_dtype)
         super().__init__(spec)
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
@@ -96,12 +109,17 @@ class HostBackedStore(EmbeddingStore):
         self.staging_capacity = int(min(staging_capacity, spec.rows))
         self.backing_path = os.fspath(backing_path) if backing_path else None
         self._backing: np.ndarray | None = None
+        self._backing_scale: np.ndarray | None = None
+        if self.quantized:
+            self.runtime_keys = ("cache", "cache_scale", "slot_of_row",
+                                 "staging", "staging_scale",
+                                 "staging_slot_of_row")
         self._counts = np.zeros(spec.rows, dtype=np.int64)
         self._slot_of_row = self._seed_map()
         self.pipeline = PrefetchPipeline(self, self.staging_capacity)
         # cached device staging tensors, reused while the staging area is
         # unchanged (an all-hit batch re-publishes without moving a byte)
-        self._staged_dev: tuple[int, jax.Array, jax.Array] | None = None
+        self._staged_dev: tuple[int, dict] | None = None
         self._staging_sharding = None   # set via bind_mesh
 
     def _seed_map(self) -> np.ndarray:
@@ -111,16 +129,32 @@ class HostBackedStore(EmbeddingStore):
 
     # -- host backing --------------------------------------------------------
     def host_view(self) -> np.ndarray:
-        """The (rows, d) backing table — host memory (or disk via mmap)."""
+        """The (rows, d) backing table — host memory (or disk via mmap).
+        *Wire* format: int8 for quantized stores (see
+        :meth:`host_scale_view`), ``spec.dtype`` otherwise."""
         if self._backing is None:
             raise RuntimeError("no backing attached yet — call init/adopt "
                                "(or HostBackedStore.open for an existing "
                                "backing_path)")
         return self._backing
 
+    def host_scale_view(self) -> np.ndarray:
+        """The (rows, 1) fp32 per-row scale column of a quantized backing
+        (the prefetch pipeline stages it alongside each int8 row)."""
+        if self._backing_scale is None:
+            raise RuntimeError("no quantized backing attached — scales "
+                               "exist only for row_dtype='int8' stores "
+                               "with a backing")
+        return self._backing_scale
+
     def cache_map_view(self) -> np.ndarray:
         """Host mirror of ``slot_of_row`` (the prefetch worker reads it)."""
         return self._slot_of_row
+
+    @property
+    def _scale_path(self) -> str | None:
+        """Sidecar file of the mmap tier's per-row scales."""
+        return self.backing_path + ".scale" if self.backing_path else None
 
     def _set_backing(self, table: np.ndarray) -> None:
         table = np.ascontiguousarray(
@@ -128,27 +162,46 @@ class HostBackedStore(EmbeddingStore):
         if table.shape != (self.spec.rows, self.spec.dim):
             raise ValueError(f"backing shape {table.shape} != "
                              f"{(self.spec.rows, self.spec.dim)}")
+        scale = None
+        if self.quantized:
+            # quantize once; every tier (cache/staging) copies these rows
+            table, scale = quant.quantize_rows(table)
+            self.stats.quant_rows += int(table.shape[0])
         if self.backing_path is not None:
             mm = np.memmap(self.backing_path, dtype=table.dtype, mode="w+",
                            shape=table.shape)
             mm[:] = table
             mm.flush()
             self._backing = mm
+            if scale is not None:
+                sm = np.memmap(self._scale_path, dtype=np.float32,
+                               mode="w+", shape=scale.shape)
+                sm[:] = scale
+                sm.flush()
+                self._backing_scale = sm
         else:
             self._backing = table
+            self._backing_scale = scale
 
     @classmethod
     def open(cls, spec: FusedEmbeddingSpec, capacity: int,
              backing_path: str | os.PathLike,
-             staging_capacity: int | None = None) -> "HostBackedStore":
+             staging_capacity: int | None = None,
+             row_dtype: str | None = None) -> "HostBackedStore":
         """Attach an existing on-disk backing (written by a prior
         :meth:`init`/:meth:`adopt` with the same spec) without copying it
-        into RAM — the disk third tier's load path."""
+        into RAM — the disk third tier's load path. ``row_dtype`` must
+        match what the file was written with (int8 backings carry their
+        scales in the ``backing_path + ".scale"`` sidecar)."""
         store = cls(spec, capacity, staging_capacity=staging_capacity,
-                    backing_path=backing_path)
-        store._backing = np.memmap(store.backing_path,
-                                   dtype=np.dtype(spec.dtype), mode="r",
-                                   shape=(spec.rows, spec.dim))
+                    backing_path=backing_path, row_dtype=row_dtype)
+        wire = np.int8 if store.quantized else np.dtype(spec.dtype)
+        store._backing = np.memmap(store.backing_path, dtype=wire,
+                                   mode="r", shape=(spec.rows, spec.dim))
+        if store.quantized:
+            store._backing_scale = np.memmap(
+                store._scale_path, dtype=np.float32, mode="r",
+                shape=(spec.rows, 1))
         return store
 
     # -- params --------------------------------------------------------------
@@ -168,23 +221,32 @@ class HostBackedStore(EmbeddingStore):
             raise ValueError("adopt needs a dense ('mega_table') or cached "
                              "('backing') subtree — a host-backed subtree "
                              "has no table to adopt; use open()")
-        self._set_backing(np.asarray(leaf))
+        leaf = np.asarray(leaf)
+        if leaf.dtype == np.int8 and "backing_scale" in params:
+            # an already-quantized cached subtree: reconstitute fp rows so
+            # _set_backing canonicalizes (and re-quantizes on-grid values)
+            leaf = quant.dequantize_rows(leaf,
+                                         np.asarray(params["backing_scale"]))
+        self._set_backing(leaf)
         return self.device_params()
 
     def device_params(self) -> dict:
-        """Build the four-tensor device subtree from the current backing +
-        index maps (cache rows are verbatim backing copies)."""
+        """Build the device subtree (four tensors, six when quantized)
+        from the current backing + index maps (cache rows are verbatim
+        backing copies — of the int8 grid, for quantized stores)."""
         backing = self.host_view()
         hot = np.flatnonzero(self._slot_of_row >= 0)
         cached_rows = hot[np.argsort(self._slot_of_row[hot])]
         if cached_rows.size != self.capacity:
             raise ValueError(f"index map holds {cached_rows.size} slots, "
                              f"capacity is {self.capacity}")
-        staging, smap = self._staging_tensors()
-        return {"cache": jnp.asarray(backing[cached_rows]),
-                "slot_of_row": jnp.asarray(self._slot_of_row),
-                "staging": staging,
-                "staging_slot_of_row": smap}
+        out = {"cache": jnp.asarray(backing[cached_rows]),
+               "slot_of_row": jnp.asarray(self._slot_of_row),
+               **self._staging_leaves()}
+        if self.quantized:
+            out["cache_scale"] = jnp.asarray(
+                self.host_scale_view()[cached_rows])
+        return out
 
     def bind_mesh(self, mesh, model_axis: str | None = "model") -> None:
         """Make per-batch staging uploads land replicated on ``mesh`` (the
@@ -199,26 +261,28 @@ class HostBackedStore(EmbeddingStore):
             self._staging_sharding = NamedSharding(mesh, P())
         self._staged_dev = None
 
-    def _staging_tensors(self) -> tuple[jax.Array, jax.Array]:
-        """Device staging pair for the pipeline's current state, reusing
-        the previous upload when the staging area hasn't changed."""
-        buf, smap, version = self.pipeline.snapshot()
+    def _staging_leaves(self) -> dict:
+        """Device staging leaves for the pipeline's current state (incl.
+        the scale sidecar when quantized), reusing the previous upload
+        when the staging area hasn't changed."""
+        buf, sbuf, smap, version = self.pipeline.snapshot()
         if self._staged_dev is not None and self._staged_dev[0] == version:
-            return self._staged_dev[1], self._staged_dev[2]
+            return self._staged_dev[1]
         if self._staging_sharding is not None:
-            staging = jax.device_put(buf, self._staging_sharding)
-            smap_dev = jax.device_put(smap, self._staging_sharding)
+            put = lambda a: jax.device_put(a, self._staging_sharding)
         else:
-            staging = jnp.asarray(buf)
-            smap_dev = jnp.asarray(smap)
-        self._staged_dev = (version, staging, smap_dev)
-        return staging, smap_dev
+            put = jnp.asarray
+        leaves = {"staging": put(buf), "staging_slot_of_row": put(smap)}
+        if sbuf is not None:
+            leaves["staging_scale"] = put(sbuf)
+        self._staged_dev = (version, leaves)
+        return leaves
 
     def partition_spec(self, model_axis: str | None = "model") -> dict:
-        """Every device leaf is small and latency-critical — replicated.
-        The backing never appears here: it is host state, not a param."""
-        return {"cache": P(), "slot_of_row": P(),
-                "staging": P(), "staging_slot_of_row": P()}
+        """Every device leaf is small and latency-critical — replicated
+        (scales placed like ``slot_of_row``). The backing never appears
+        here: it is host state, not a param."""
+        return {k: P() for k in self.runtime_keys}
 
     def dense_view(self, params: dict) -> jax.Array:
         raise NotImplementedError(
@@ -266,10 +330,10 @@ class HostBackedStore(EmbeddingStore):
             raise
         self.stats.staged_rows += staged
         self.stats.prefetched_rows += already
-        self.stats.h2d_bytes += staged * self.spec.dim * \
-            np.dtype(self.spec.dtype).itemsize
-        staging, smap = self._staging_tensors()
-        return {**params, "staging": staging, "staging_slot_of_row": smap}
+        # wire bytes: what the staging upload actually moves per row
+        # (d + 4 for int8 rows + their scale, 4·d full-precision)
+        self.stats.h2d_bytes += staged * self.wire_row_bytes
+        return {**params, **self._staging_leaves()}
 
     def prefetch_hint(self, ids, mask=None) -> None:
         """Queue an upcoming batch's rows for speculative off-thread
@@ -300,6 +364,12 @@ class HostBackedStore(EmbeddingStore):
     def lookup(self, params: dict, ids: jax.Array, offsets: jax.Array, *,
                strategy: str = "auto",
                interpret: bool | None = None) -> jax.Array:
+        if self.quantized:
+            return kops.multi_table_lookup_host_q8(
+                ids, params["cache"], params["cache_scale"],
+                params["staging"], params["staging_scale"],
+                params["slot_of_row"], params["staging_slot_of_row"],
+                offsets, strategy=strategy, interpret=interpret)
         return kops.multi_table_lookup_host(
             ids, params["cache"], params["staging"], params["slot_of_row"],
             params["staging_slot_of_row"], offsets,
@@ -308,6 +378,12 @@ class HostBackedStore(EmbeddingStore):
     def lookup_multihot(self, params: dict, ids: jax.Array, mask: jax.Array,
                         offsets: jax.Array, *, strategy: str = "auto",
                         interpret: bool | None = None) -> jax.Array:
+        if self.quantized:
+            return kops.multi_table_lookup_host_q8_multihot(
+                ids, mask, params["cache"], params["cache_scale"],
+                params["staging"], params["staging_scale"],
+                params["slot_of_row"], params["staging_slot_of_row"],
+                offsets, strategy=strategy, interpret=interpret)
         return kops.multi_table_lookup_host_multihot(
             ids, mask, params["cache"], params["staging"],
             params["slot_of_row"], params["staging_slot_of_row"], offsets,
@@ -321,6 +397,7 @@ class HostBackedStore(EmbeddingStore):
         hits = int((self._slot_of_row[rows] >= 0).sum())
         self.stats.hits += hits
         self.stats.misses += rows.size - hits
+        self._observe_traffic(rows)
 
     def refresh(self, params: dict) -> dict:
         """Re-admit the C most frequent observed rows into the device
@@ -354,5 +431,6 @@ class HostBackedStore(EmbeddingStore):
 
     def describe(self) -> str:
         tier3 = ",mmap" if self.backing_path else ""
+        q = ",int8" if self.quantized else ""
         return (f"host(C={self.capacity},S={self.staging_capacity},"
-                f"rows={self.spec.rows},d={self.spec.dim}{tier3})")
+                f"rows={self.spec.rows},d={self.spec.dim}{tier3}{q})")

@@ -68,8 +68,13 @@ class PrefetchPipeline:
         self._store = store
         self.capacity = int(capacity)
         spec = store.spec
-        self._buf = np.zeros((self.capacity, spec.dim),
-                             dtype=np.dtype(spec.dtype))
+        # the buffer holds *wire*-format rows: int8 payload (+ fp32 scale
+        # sidecar) for quantized stores, full-precision rows otherwise —
+        # so staging h2d traffic shrinks with the representation
+        wire_dtype = np.int8 if spec.quantized else np.dtype(spec.dtype)
+        self._buf = np.zeros((self.capacity, spec.dim), dtype=wire_dtype)
+        self._sbuf = (np.zeros((self.capacity, 1), dtype=np.float32)
+                      if spec.quantized else None)
         self._slot_of_staged = np.full(spec.rows, -1, dtype=np.int32)
         self._lru: OrderedDict[int, int] = OrderedDict()   # row -> slot
         self._free = list(range(self.capacity - 1, -1, -1))
@@ -100,6 +105,8 @@ class PrefetchPipeline:
         """Gather ``need`` backing rows into free/evicted slots. Caller
         holds the lock and has verified the miss set fits."""
         backing = self._store.host_view()
+        scales = self._store.host_scale_view() if self._sbuf is not None \
+            else None
         staged = 0
         for row in need:
             row = int(row)
@@ -114,6 +121,8 @@ class PrefetchPipeline:
                 slot = self._lru.pop(victim)
                 self._slot_of_staged[victim] = -1
             self._buf[slot] = backing[row]
+            if scales is not None:
+                self._sbuf[slot] = scales[row]
             self._slot_of_staged[row] = slot
             self._lru[row] = slot
             staged += 1
@@ -145,11 +154,15 @@ class PrefetchPipeline:
             staged = self._stage_rows_locked(need, set(miss_rows.tolist()))
         return staged, already
 
-    def snapshot(self) -> tuple[np.ndarray, np.ndarray, int]:
-        """Copy of ``(staging_buf, slot_of_staged, version)`` — safe to
-        upload while the worker keeps staging for later batches."""
+    def snapshot(self) -> tuple[np.ndarray, np.ndarray | None,
+                                np.ndarray, int]:
+        """Copy of ``(staging_buf, scale_buf_or_None, slot_of_staged,
+        version)`` — safe to upload while the worker keeps staging for
+        later batches. The scale sidecar is ``None`` for full-precision
+        stores."""
         with self._lock:
-            return self._buf.copy(), self._slot_of_staged.copy(), \
+            sbuf = self._sbuf.copy() if self._sbuf is not None else None
+            return self._buf.copy(), sbuf, self._slot_of_staged.copy(), \
                 self._version
 
     def drop(self, rows: np.ndarray) -> int:

@@ -24,12 +24,24 @@ class FusedEmbeddingSpec:
         multi_hot:   max ids per field (1 = one-hot fields).
         dtype:       parameter dtype.
         pad_rows_to: pad the mega-table height to a multiple (sharding).
+        row_dtype:   *wire* dtype of stored rows — ``None`` (default) keeps
+                     rows in ``dtype`` (bit-exact); ``"int8"`` stores rows
+                     symmetrically quantized with one fp32 scale per row
+                     (``repro.quant``), dequantized inside the gather.
+                     A store-side memory-system choice: two specs differing
+                     only in ``row_dtype`` describe the same model.
     """
     field_sizes: tuple[int, ...]
     dim: int
     multi_hot: int = 1
     dtype: str = "float32"
     pad_rows_to: int = 1
+    row_dtype: str | None = None
+
+    def __post_init__(self):
+        if self.row_dtype not in (None, "int8"):
+            raise ValueError(f"row_dtype must be None or 'int8', "
+                             f"got {self.row_dtype!r}")
 
     @property
     def k(self) -> int:
@@ -51,6 +63,19 @@ class FusedEmbeddingSpec:
     @property
     def zero_row(self) -> int:
         return int(sum(self.field_sizes))
+
+    @property
+    def quantized(self) -> bool:
+        """True when stored rows travel as int8 + per-row fp32 scale."""
+        return self.row_dtype == "int8"
+
+    @property
+    def wire_row_bytes(self) -> int:
+        """Bytes one row costs on the wire (gather / host→device staging):
+        ``4·d`` for fp32 rows, ``d + 4`` for int8 rows (payload + scale)."""
+        if self.quantized:
+            return self.dim + 4
+        return self.dim * np.dtype(self.dtype).itemsize
 
     @property
     def n_params(self) -> int:

@@ -68,6 +68,15 @@ class StoreStats:
     staging traffic those synchronous rows cost, and ``staging_overflows``
     batches whose miss set exceeded the staging buffer (served via the
     chunked fallback).
+
+    All byte counters are **wire** bytes — dtype-aware via the spec's
+    ``wire_row_bytes`` (``4·d`` for fp32 rows, ``d + 4`` for int8 rows +
+    their fp32 scale), never an fp32 assumption. ``gather_bytes`` accounts
+    the device-side gather traffic of observed lookups (rows × wire bytes);
+    the ``quant_*`` pair is nonzero only for quantized stores:
+    ``quant_rows`` counts rows pushed through ``repro.quant`` at
+    init/adopt/refresh time, ``quant_bytes_saved`` the gather bytes the
+    int8 representation avoided vs full-precision rows.
     """
     hits: int = 0
     misses: int = 0
@@ -76,6 +85,9 @@ class StoreStats:
     prefetched_rows: int = 0
     h2d_bytes: int = 0
     staging_overflows: int = 0
+    gather_bytes: int = 0
+    quant_rows: int = 0
+    quant_bytes_saved: int = 0
 
     @property
     def lookups(self) -> int:
@@ -116,6 +128,29 @@ class EmbeddingStore:
         self.spec = spec
         self.stats = StoreStats()
 
+    @property
+    def quantized(self) -> bool:
+        """True when this store's rows travel as int8 + per-row fp32 scale
+        (``spec.row_dtype == "int8"``). Quantized stores relax the
+        bit-exactness contract to the accuracy-parity gate — the gather
+        dequantizes in-kernel, so scores differ from fp32 by at most the
+        per-row round-trip error (≤ scale/2 per element)."""
+        return self.spec.quantized
+
+    @property
+    def wire_row_bytes(self) -> int:
+        """Bytes one row moves on gather / host→device staging."""
+        return self.spec.wire_row_bytes
+
+    def _observe_traffic(self, rows: np.ndarray) -> None:
+        """Wire-byte accounting shared by every tiered store's ``observe``:
+        ``rows`` are the clipped global rows this batch gathered."""
+        self.stats.gather_bytes += rows.size * self.wire_row_bytes
+        if self.quantized:
+            full = self.spec.dim * np.dtype(self.spec.dtype).itemsize
+            self.stats.quant_bytes_saved += rows.size * (
+                full - self.wire_row_bytes)
+
     # -- params ------------------------------------------------------------
     def init(self, key: jax.Array) -> dict:
         """Fresh parameter subtree for this store."""
@@ -125,7 +160,10 @@ class EmbeddingStore:
         """The canonical (rows, d) mega-table init shared by every store
         (so Dense/Cached params built from one key are value-identical)."""
         spec = self.spec
-        scale = 1.0 / np.sqrt(spec.dim)
+        # flat small std, production-CTR style (fan-in scaling belongs to
+        # the MLP, not the table). Row magnitude also sets the int8
+        # absmax grid step, so oversized rows would punish quantized tiers.
+        scale = 0.05
         table = jax.random.normal(
             key, (spec.rows, spec.dim), dtype=jnp.dtype(spec.dtype)) * scale
         # zero row (and padding rows) must stay zero for multi-hot masking
@@ -237,7 +275,15 @@ class DenseStore(EmbeddingStore):
     def adopt(self, params: dict) -> dict:
         if "mega_table" in params:
             return params
-        return {"mega_table": params["backing"]}
+        backing = params["backing"]
+        if "backing_scale" in params and backing.dtype == jnp.int8:
+            # a quantized tiered subtree: reconstitute full-precision rows
+            # (lossy source — the int8 grid is all the values that remain)
+            from repro import quant
+            backing = quant.dequantize_rows(
+                backing, params["backing_scale"]).astype(
+                    jnp.dtype(self.spec.dtype))
+        return {"mega_table": backing}
 
     def partition_spec(self, model_axis: str | None = "model") -> dict:
         """Row-sharded (vocab-parallel) placement of the mega-table."""

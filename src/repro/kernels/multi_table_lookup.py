@@ -209,6 +209,87 @@ def mtl_gather_two_level(flat_rows: jax.Array, slots: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Quantized two-level gather — the int8 CachedStore lookup
+# ---------------------------------------------------------------------------
+
+def _two_level_q8_kernel(slots_ref, rows_ref, cache_ref, cscale_ref,
+                         backing_ref, bscale_ref, out_ref):
+    # Same tier selection as the fp32 kernel — the scalar-prefetched index
+    # maps already fetched the winning tier's int8 row *and its (1, 1) fp32
+    # scale* (the scale rides the identical index map, so picking the tier
+    # picks both). Dequantization is one multiply in registers: the fp32
+    # row never exists in memory.
+    del rows_ref
+    p = pl.program_id(0)
+    hot = pl.num_programs(1)
+    j = pl.program_id(1)
+    hit = slots_ref[p * hot + j] >= 0
+    q = jnp.where(hit, cache_ref[...], backing_ref[...]).astype(jnp.float32)
+    s = jnp.where(hit, cscale_ref[...], bscale_ref[...])
+    val = q * s
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = val
+
+    @pl.when(j > 0)
+    def _acc():
+        out_ref[...] += val
+
+
+@functools.partial(jax.jit, static_argnames=("hot", "interpret"))
+def mtl_gather_two_level_q8(flat_rows: jax.Array, slots: jax.Array,
+                            cache: jax.Array, cache_scale: jax.Array,
+                            backing: jax.Array, backing_scale: jax.Array, *,
+                            hot: int = 1, interpret: bool = False
+                            ) -> jax.Array:
+    """Quantized two-level gather with in-kernel dequantization.
+
+    The int8 variant of :func:`mtl_gather_two_level`: both tiers hold int8
+    rows plus an ``(N, 1)`` fp32 scale column, and each scale BlockSpec
+    reuses its tier's row index map — HBM moves ``d + 4`` bytes per row
+    instead of ``4·d``. The body dequantizes the selected row
+    (``q.astype(f32) * scale``) before the pooled accumulate, so multi-hot
+    pooling happens in fp32 (int8 sums would overflow and compound error).
+
+    Args:
+        flat_rows:     (R*hot,) int32 global rows into ``backing``.
+        slots:         (R*hot,) int32 cache slot per row, -1 = not cached.
+        cache:         (C, d) int8 hot-row copies.
+        cache_scale:   (C, 1) fp32 per-row scales of the cache tier.
+        backing:       (N, d) int8 full mega-table.
+        backing_scale: (N, 1) fp32 per-row scales of the backing tier.
+
+    Returns:
+        (R, d) float32 dequantized (hot=1) or sum-pooled (hot>1) rows.
+    """
+    rh = flat_rows.shape[0]
+    r = rh // hot
+    d = backing.shape[1]
+    cache_idx = lambda p, j, slots, rows: (jnp.maximum(slots[p * hot + j],
+                                                       0), 0)
+    backing_idx = lambda p, j, slots, rows: (
+        jnp.where(slots[p * hot + j] >= 0, 0, rows[p * hot + j]), 0)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(r, hot),
+        in_specs=[
+            pl.BlockSpec((1, d), cache_idx),
+            pl.BlockSpec((1, 1), cache_idx),     # scale rides the row's map
+            pl.BlockSpec((1, d), backing_idx),
+            pl.BlockSpec((1, 1), backing_idx),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda p, j, slots, rows: (p, 0)),
+    )
+    return pl.pallas_call(
+        _two_level_q8_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((r, d), jnp.float32),
+        interpret=interpret,
+    )(slots, flat_rows, cache, cache_scale, backing, backing_scale)
+
+
+# ---------------------------------------------------------------------------
 # Three-level (cache / staging / zero-guard) gather — the HostBackedStore
 # lookup
 # ---------------------------------------------------------------------------
@@ -286,6 +367,88 @@ def mtl_gather_three_level(cslots: jax.Array, sslots: jax.Array,
         out_shape=jax.ShapeDtypeStruct((r, d), cache.dtype),
         interpret=interpret,
     )(cslots, sslots, cache, staging)
+
+
+# ---------------------------------------------------------------------------
+# Quantized three-level gather — the int8 HostBackedStore lookup
+# ---------------------------------------------------------------------------
+
+def _three_level_q8_kernel(cslots_ref, sslots_ref, cache_ref, cscale_ref,
+                           staging_ref, sscale_ref, out_ref):
+    # Double select on the int8 payload (zero-guard included: a row in
+    # neither tier dequantizes from q = 0, so any scale multiplies to an
+    # exact 0.0), single select on the scale, one dequant multiply.
+    p = pl.program_id(0)
+    hot = pl.num_programs(1)
+    j = pl.program_id(1)
+    cache_hit = cslots_ref[p * hot + j] >= 0
+    stage_hit = sslots_ref[p * hot + j] >= 0
+    q = jnp.where(cache_hit, cache_ref[...],
+                  jnp.where(stage_hit, staging_ref[...],
+                            jnp.zeros_like(cache_ref[...]))
+                  ).astype(jnp.float32)
+    s = jnp.where(cache_hit, cscale_ref[...], sscale_ref[...])
+    val = q * s
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = val
+
+    @pl.when(j > 0)
+    def _acc():
+        out_ref[...] += val
+
+
+@functools.partial(jax.jit, static_argnames=("hot", "interpret"))
+def mtl_gather_three_level_q8(cslots: jax.Array, sslots: jax.Array,
+                              cache: jax.Array, cache_scale: jax.Array,
+                              staging: jax.Array, staging_scale: jax.Array,
+                              *, hot: int = 1, interpret: bool = False
+                              ) -> jax.Array:
+    """Quantized three-level gather with in-kernel dequantization.
+
+    The int8 variant of :func:`mtl_gather_three_level`: cache and staging
+    hold int8 rows with ``(·, 1)`` fp32 scale columns whose BlockSpecs
+    reuse the row index maps, so the host→device staging path and the
+    device gather both move ``d + 4`` bytes per row. Rows in neither tier
+    keep the zero-guard: the int8 payload selects to 0, and 0 times any
+    scale is exactly 0.0.
+
+    Args:
+        cslots:        (R*hot,) int32 cache slot per row, -1 = not cached.
+        sslots:        (R*hot,) int32 staging slot per row, -1 = not staged.
+        cache:         (C, d) int8 hot-row copies.
+        cache_scale:   (C, 1) fp32 per-row scales of the cache tier.
+        staging:       (S, d) int8 staged miss rows.
+        staging_scale: (S, 1) fp32 per-row scales of the staging tier.
+
+    Returns:
+        (R, d) float32 dequantized (hot=1) or sum-pooled (hot>1) rows.
+    """
+    rh = cslots.shape[0]
+    r = rh // hot
+    d = cache.shape[1]
+    cache_idx = lambda p, j, cslots, sslots: (
+        jnp.maximum(cslots[p * hot + j], 0), 0)
+    staging_idx = lambda p, j, cslots, sslots: (
+        jnp.maximum(sslots[p * hot + j], 0), 0)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(r, hot),
+        in_specs=[
+            pl.BlockSpec((1, d), cache_idx),
+            pl.BlockSpec((1, 1), cache_idx),
+            pl.BlockSpec((1, d), staging_idx),
+            pl.BlockSpec((1, 1), staging_idx),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda p, j, cslots, sslots: (p, 0)),
+    )
+    return pl.pallas_call(
+        _three_level_q8_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((r, d), jnp.float32),
+        interpret=interpret,
+    )(cslots, sslots, cache, cache_scale, staging, staging_scale)
 
 
 # ---------------------------------------------------------------------------

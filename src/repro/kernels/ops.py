@@ -28,7 +28,9 @@ from .multi_table_lookup import (
     mtl_gather,
     mtl_gather_multihot,
     mtl_gather_three_level,
+    mtl_gather_three_level_q8,
     mtl_gather_two_level,
+    mtl_gather_two_level_q8,
     mtl_input_first,
     mtl_onehot,
 )
@@ -38,8 +40,12 @@ __all__ = [
     "multi_table_lookup_multihot",
     "multi_table_lookup_cached",
     "multi_table_lookup_cached_multihot",
+    "multi_table_lookup_cached_q8",
+    "multi_table_lookup_cached_q8_multihot",
     "multi_table_lookup_host",
     "multi_table_lookup_host_multihot",
+    "multi_table_lookup_host_q8",
+    "multi_table_lookup_host_q8_multihot",
     "fused_cross_v1",
     "fused_cross_v2",
     "fused_fm_second_order",
@@ -186,6 +192,107 @@ def multi_table_lookup_cached_multihot(ids: jax.Array, mask: jax.Array,
     raise ValueError(f"unknown strategy {strategy!r}")
 
 
+def multi_table_lookup_cached_q8(ids: jax.Array, cache: jax.Array,
+                                 cache_scale: jax.Array, backing: jax.Array,
+                                 backing_scale: jax.Array,
+                                 slot_of_row: jax.Array, offsets: jax.Array,
+                                 *, strategy: str = "auto",
+                                 interpret: bool | None = None) -> jax.Array:
+    """Quantized tiered lookup: int8 cache/backing rows, per-row fp32
+    scales, dequantization inside the gather.
+
+    The int8 twin of :func:`multi_table_lookup_cached` — same tier
+    selection, ~``(d + 4) / 4d`` of its gather bytes, float32 output.
+    Not bit-exact with the dense path (round-trip error ≤ scale/2 per
+    element); the accuracy-parity benchmark gates the model-level impact.
+
+    Args:
+        ids:           (b, k) int32 per-field local ids.
+        cache:         (C, d) int8 hot-row copies.
+        cache_scale:   (C, 1) fp32 per-row scales.
+        backing:       (N, d) int8 full mega-table.
+        backing_scale: (N, 1) fp32 per-row scales.
+        slot_of_row:   (N,) int32 cache slot per global row, -1 = uncached.
+        offsets:       (k,) int32 starting row of each table.
+
+    Returns:
+        (b, k*d) float32 embedding output.
+    """
+    b, k = ids.shape
+    d = backing.shape[1]
+    if interpret is None:
+        interpret = not on_tpu()
+    if strategy == "auto":
+        strategy = "pallas" if on_tpu() else "jnp"
+    rows = _flat_rows(ids, offsets)
+    if strategy == "jnp":
+        out = ref.ref_two_level_gather_q8(rows, slot_of_row, cache,
+                                          cache_scale, backing, backing_scale)
+    elif strategy == "pallas":
+        slots = jnp.take(slot_of_row, rows, axis=0)
+        out = mtl_gather_two_level_q8(rows, slots, cache, cache_scale,
+                                      backing, backing_scale,
+                                      interpret=interpret)
+    else:
+        raise ValueError(f"unknown strategy {strategy!r}")
+    return out.reshape(b, k * d)
+
+
+def multi_table_lookup_cached_q8_multihot(ids: jax.Array, mask: jax.Array,
+                                          cache: jax.Array,
+                                          cache_scale: jax.Array,
+                                          backing: jax.Array,
+                                          backing_scale: jax.Array,
+                                          slot_of_row: jax.Array,
+                                          offsets: jax.Array, *,
+                                          strategy: str = "auto",
+                                          interpret: bool | None = None
+                                          ) -> jax.Array:
+    """Multi-hot (pooled) quantized tiered lookup.
+
+    Masked slots redirect to the mega-table's zero row exactly as in the
+    fp32 path — the zero row's int8 payload is 0, so it dequantizes to an
+    exact 0.0 under any scale and pooling stays correct. Pooling happens
+    in fp32 *after* per-row dequant (inside the kernel), never in int8.
+
+    Args:
+        ids:           (b, k, h) local ids; invalid slots arbitrary.
+        mask:          (b, k, h) 1 for valid slots, 0 otherwise.
+        cache:         (C, d) int8 hot-row copies.
+        cache_scale:   (C, 1) fp32 per-row scales.
+        backing:       (N, d) int8 mega-table **with a trailing zero row**.
+        backing_scale: (N, 1) fp32 per-row scales.
+        slot_of_row:   (N,) int32 index map.
+        offsets:       (k,) table starts.
+
+    Returns:
+        (b, k*d) float32 pooled output.
+    """
+    b, k, h = ids.shape
+    d = backing.shape[1]
+    if interpret is None:
+        interpret = not on_tpu()
+    if strategy == "auto":
+        strategy = "pallas" if on_tpu() else "jnp"
+    zero_row = backing.shape[0] - 1
+    rows = ids.astype(jnp.int32) + offsets[None, :, None].astype(jnp.int32)
+    rows = jnp.where(mask.astype(bool), rows, zero_row).reshape(-1)
+    if strategy == "jnp":
+        vals = ref.ref_two_level_gather_q8(rows, slot_of_row, cache,
+                                           cache_scale, backing,
+                                           backing_scale)
+        pooled = jnp.sum(vals.reshape(b, k, h, d)
+                         * mask[..., None].astype(vals.dtype), axis=2)
+        return pooled.reshape(b, k * d)
+    if strategy == "pallas":
+        slots = jnp.take(slot_of_row, rows, axis=0)
+        out = mtl_gather_two_level_q8(rows, slots, cache, cache_scale,
+                                      backing, backing_scale, hot=h,
+                                      interpret=interpret)
+        return out.reshape(b, k * d)
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
 def multi_table_lookup_host(ids: jax.Array, cache: jax.Array,
                             staging: jax.Array, slot_of_row: jax.Array,
                             staging_slot_of_row: jax.Array,
@@ -280,6 +387,113 @@ def multi_table_lookup_host_multihot(ids: jax.Array, mask: jax.Array,
         sslots = jnp.take(staging_slot_of_row, rows, axis=0)
         out = mtl_gather_three_level(cslots, sslots, cache, staging, hot=h,
                                      interpret=interpret)
+        return out.reshape(b, k * d)
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
+def multi_table_lookup_host_q8(ids: jax.Array, cache: jax.Array,
+                               cache_scale: jax.Array, staging: jax.Array,
+                               staging_scale: jax.Array,
+                               slot_of_row: jax.Array,
+                               staging_slot_of_row: jax.Array,
+                               offsets: jax.Array, *, strategy: str = "auto",
+                               interpret: bool | None = None) -> jax.Array:
+    """Quantized out-of-HBM lookup: int8 cache/staging rows, fp32 scales,
+    in-gather dequant, zero-guard intact (q = 0 dequantizes to 0.0).
+
+    The int8 twin of :func:`multi_table_lookup_host`; the serve path's
+    staging contract is unchanged — every miss must be staged before the
+    lookup, only the bytes staged per row shrink to ``d + 4``.
+
+    Args:
+        ids:                 (b, k) int32 per-field local ids.
+        cache:               (C, d) int8 hot-row copies.
+        cache_scale:         (C, 1) fp32 per-row scales.
+        staging:             (S, d) int8 staged miss rows.
+        staging_scale:       (S, 1) fp32 per-row scales.
+        slot_of_row:         (N,) int32 cache slot per row, -1 = uncached.
+        staging_slot_of_row: (N,) int32 staging slot per row, -1 = unstaged.
+        offsets:             (k,) int32 starting row of each table.
+
+    Returns:
+        (b, k*d) float32 embedding output.
+    """
+    b, k = ids.shape
+    d = cache.shape[1]
+    if interpret is None:
+        interpret = not on_tpu()
+    if strategy == "auto":
+        strategy = "pallas" if on_tpu() else "jnp"
+    rows = _flat_rows(ids, offsets)
+    if strategy == "jnp":
+        out = ref.ref_three_level_gather_q8(
+            rows, slot_of_row, staging_slot_of_row,
+            cache, cache_scale, staging, staging_scale)
+    elif strategy == "pallas":
+        cslots = jnp.take(slot_of_row, rows, axis=0)
+        sslots = jnp.take(staging_slot_of_row, rows, axis=0)
+        out = mtl_gather_three_level_q8(cslots, sslots, cache, cache_scale,
+                                        staging, staging_scale,
+                                        interpret=interpret)
+    else:
+        raise ValueError(f"unknown strategy {strategy!r}")
+    return out.reshape(b, k * d)
+
+
+def multi_table_lookup_host_q8_multihot(ids: jax.Array, mask: jax.Array,
+                                        cache: jax.Array,
+                                        cache_scale: jax.Array,
+                                        staging: jax.Array,
+                                        staging_scale: jax.Array,
+                                        slot_of_row: jax.Array,
+                                        staging_slot_of_row: jax.Array,
+                                        offsets: jax.Array, *,
+                                        strategy: str = "auto",
+                                        interpret: bool | None = None
+                                        ) -> jax.Array:
+    """Multi-hot (pooled) quantized out-of-HBM lookup.
+
+    Masked slots redirect to the zero row; whichever tier holds it (or the
+    zero-guard, if neither does) contributes an exact 0.0 because the int8
+    payload is 0. Pooling is fp32 post-dequant, as in the cached variant.
+
+    Args:
+        ids:                 (b, k, h) local ids; invalid slots arbitrary.
+        mask:                (b, k, h) 1 for valid slots, 0 otherwise.
+        cache:               (C, d) int8 hot-row copies.
+        cache_scale:         (C, 1) fp32 per-row scales.
+        staging:             (S, d) int8 staged miss rows.
+        staging_scale:       (S, 1) fp32 per-row scales.
+        slot_of_row:         (N,) int32 cache index map.
+        staging_slot_of_row: (N,) int32 staging index map.
+        offsets:             (k,) table starts.
+
+    Returns:
+        (b, k*d) float32 pooled output.
+    """
+    b, k, h = ids.shape
+    d = cache.shape[1]
+    if interpret is None:
+        interpret = not on_tpu()
+    if strategy == "auto":
+        strategy = "pallas" if on_tpu() else "jnp"
+    zero_row = slot_of_row.shape[0] - 1
+    rows = ids.astype(jnp.int32) + offsets[None, :, None].astype(jnp.int32)
+    rows = jnp.where(mask.astype(bool), rows, zero_row).reshape(-1)
+    if strategy == "jnp":
+        vals = ref.ref_three_level_gather_q8(
+            rows, slot_of_row, staging_slot_of_row,
+            cache, cache_scale, staging, staging_scale)
+        pooled = jnp.sum(vals.reshape(b, k, h, d)
+                         * mask.reshape(b, k, h, 1).astype(vals.dtype),
+                         axis=2)
+        return pooled.reshape(b, k * d)
+    if strategy == "pallas":
+        cslots = jnp.take(slot_of_row, rows, axis=0)
+        sslots = jnp.take(staging_slot_of_row, rows, axis=0)
+        out = mtl_gather_three_level_q8(cslots, sslots, cache, cache_scale,
+                                        staging, staging_scale, hot=h,
+                                        interpret=interpret)
         return out.reshape(b, k * d)
     raise ValueError(f"unknown strategy {strategy!r}")
 

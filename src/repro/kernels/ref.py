@@ -152,6 +152,71 @@ def ref_three_level_gather(flat_rows, slot_of_row, staging_slot_of_row,
     return out.astype(cache.dtype)
 
 
+def ref_two_level_gather_q8(flat_rows, slot_of_row, cache, cache_scale,
+                            backing, backing_scale):
+    """Quantized two-level gather oracle — the int8 CachedStore lookup.
+
+    Mirrors ``mtl_gather_two_level_q8``'s arithmetic *exactly* (select the
+    int8 payload, select the fp32 scale via the same hit predicate, one
+    dequant multiply), so the kernel-vs-ref comparison is bitwise.
+
+    Args:
+        flat_rows:     (R,) int32 global rows.
+        slot_of_row:   (N,) int32 cache slot per global row, -1 = uncached.
+        cache:         (C, d) int8 hot-row copies.
+        cache_scale:   (C, 1) fp32 per-row scales.
+        backing:       (N, d) int8 full mega-table.
+        backing_scale: (N, 1) fp32 per-row scales.
+
+    Returns:
+        (R, d) float32 dequantized rows.
+    """
+    slots = jnp.take(slot_of_row, flat_rows, axis=0)
+    hit = slots >= 0
+    safe_slots = jnp.maximum(slots, 0)
+    miss_rows = jnp.where(hit, 0, flat_rows)
+    q = jnp.where(hit[:, None],
+                  jnp.take(cache, safe_slots, axis=0),
+                  jnp.take(backing, miss_rows, axis=0)).astype(jnp.float32)
+    s = jnp.where(hit[:, None],
+                  jnp.take(cache_scale, safe_slots, axis=0),
+                  jnp.take(backing_scale, miss_rows, axis=0))
+    return q * s
+
+
+def ref_three_level_gather_q8(flat_rows, slot_of_row, staging_slot_of_row,
+                              cache, cache_scale, staging, staging_scale):
+    """Quantized three-level gather oracle — the int8 HostBackedStore
+    lookup (zero-guard included: rows in neither tier select an int8
+    payload of 0, which dequantizes to exactly 0.0 under any scale).
+
+    Args:
+        flat_rows:           (R,) int32 global rows.
+        slot_of_row:         (N,) int32 cache slot per row, -1 = uncached.
+        staging_slot_of_row: (N,) int32 staging slot per row, -1 = unstaged.
+        cache:               (C, d) int8 hot-row copies.
+        cache_scale:         (C, 1) fp32 per-row scales.
+        staging:             (S, d) int8 staged miss rows.
+        staging_scale:       (S, 1) fp32 per-row scales.
+
+    Returns:
+        (R, d) float32 dequantized rows (zero where neither tier resolves).
+    """
+    cslots = jnp.take(slot_of_row, flat_rows, axis=0)
+    sslots = jnp.take(staging_slot_of_row, flat_rows, axis=0)
+    cache_hit = cslots >= 0
+    stage_hit = sslots >= 0
+    from_cache = jnp.take(cache, jnp.maximum(cslots, 0), axis=0)
+    from_staging = jnp.take(staging, jnp.maximum(sslots, 0), axis=0)
+    q = jnp.where(cache_hit[:, None], from_cache,
+                  jnp.where(stage_hit[:, None], from_staging, 0)
+                  ).astype(jnp.float32)
+    s = jnp.where(cache_hit[:, None],
+                  jnp.take(cache_scale, jnp.maximum(cslots, 0), axis=0),
+                  jnp.take(staging_scale, jnp.maximum(sslots, 0), axis=0))
+    return q * s
+
+
 # ---------------------------------------------------------------------------
 # Fused non-GEMM oracles (C5)
 # ---------------------------------------------------------------------------

@@ -87,6 +87,9 @@ def _engine_line(name, eng, scores, store, use_async):
     if store == "host":
         emb += (f" prefetch_hit={s.emb_prefetch_hit_rate:.1%} "
                 f"staged={s.emb_staged_rows} h2d={s.emb_h2d_bytes}B")
+    if s.emb_quant_rows:
+        emb += (f" gather={s.emb_gather_bytes}B "
+                f"quant_saved={s.emb_quant_bytes_saved}B")
     mode = "async" if use_async else "sync"
     print(f"[serve:{mode}] {name}: {s.n_requests} requests in "
           f"{s.n_batches} batches  p50={s.p50_ms:.1f}ms "
@@ -113,15 +116,22 @@ def serve_ctr(args) -> None:
         spec = ctr_spec(name, "criteo", 16, 256, max_field=100_000)
         model = CTR_MODELS[name](spec)
         params = model.init(jax.random.PRNGKey(0))
+        row_dtype = None if args.emb_dtype == "fp32" else args.emb_dtype
         store = None
         if args.store == "cached":
             from repro.embedding import CachedStore
             store = CachedStore(spec.embedding_spec(),
-                                capacity=args.cache_capacity)
+                                capacity=args.cache_capacity,
+                                row_dtype=row_dtype)
         elif args.store == "host":
             from repro.embedding import HostBackedStore
             store = HostBackedStore(spec.embedding_spec(),
-                                    capacity=args.cache_capacity)
+                                    capacity=args.cache_capacity,
+                                    row_dtype=row_dtype)
+        elif row_dtype is not None:
+            raise SystemExit("--emb-dtype int8 needs a tiered store "
+                             "(--store cached or host); DenseStore stays "
+                             "full-precision")
         rt.add_model(name, model, params, level=args.level,
                      policy=_make_policy(args), store=store,
                      refresh_every=args.refresh_every)
@@ -203,6 +213,12 @@ def main() -> None:
                          "keeps the backing table out of device memory")
     ap.add_argument("--cache-capacity", type=int, default=65536,
                     help="hot-row capacity C for --store cached/host")
+    ap.add_argument("--emb-dtype", default="fp32",
+                    choices=["fp32", "int8"],
+                    help="wire dtype of cached/host store rows: int8 "
+                         "stores rows quantized (absmax + per-row fp32 "
+                         "scale), ~4x less gather/h2d traffic, dequant "
+                         "in-kernel; fp32 (default) stays bit-exact")
     ap.add_argument("--refresh-every", type=int, default=None,
                     help="per-engine: rebuild the hot cache every N served "
                          "batches (plan cache survives — tensor swap)")

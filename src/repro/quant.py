@@ -1,0 +1,83 @@
+"""Shared int8 symmetric (absmax) quantization helpers.
+
+One quantization codepath for every int8 wire format in the repo:
+
+* **embedding rows** — ``repro.embedding`` stores built with
+  ``row_dtype="int8"`` hold cache/backing/staging rows as int8 with one
+  fp32 scale per row; dequantization happens inside the Pallas gathers
+  (``repro.kernels.multi_table_lookup``), so the fp32 row never exists in
+  memory, only in registers. ~4× gather/h2d bandwidth at d=32.
+* **gradient compression** — ``repro.training.compression`` quantizes
+  per-256-element blocks with a rank-shared scale for the data-parallel
+  all-reduce.
+
+Symmetric absmax: ``scale = max|x| / 127`` (the -128 code is unused so the
+grid is symmetric around an *exact* zero), ``q = clip(round(x / scale))``.
+Round-trip error is bounded by ``scale / 2`` per element (round to
+nearest); all-zero rows get the ``SCALE_EPS`` floor so they quantize to
+``q = 0`` and dequantize to exactly ``0.0`` — the multi-hot masking zero
+row stays a true zero through the int8 tier.
+
+Every helper works on both jnp arrays (device tensors — store init/adopt/
+refresh) and numpy arrays (host tensors — the ``HostBackedStore`` backing
+and the prefetch pipeline's staging buffer), with identical semantics
+(both round half to even).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+__all__ = ["QMAX", "SCALE_EPS", "absmax_scale", "quantize", "dequantize",
+           "quantize_rows", "dequantize_rows"]
+
+#: symmetric int8 range [-127, 127]; -128 is deliberately unused
+QMAX = 127.0
+#: floor for all-zero blocks/rows: q = 0 and dequant = 0 exactly
+SCALE_EPS = 1e-12
+
+
+def _xp(*arrays):
+    """numpy for host arrays, jnp otherwise (semantics are identical)."""
+    return np if all(isinstance(a, np.ndarray) for a in arrays) else jnp
+
+
+def absmax_scale(x, axis=-1):
+    """Per-slice symmetric scale ``max|x| / QMAX`` (keepdims), floored at
+    ``SCALE_EPS`` so all-zero slices round-trip to exact zero."""
+    xp = _xp(x)
+    s = xp.max(xp.abs(x), axis=axis, keepdims=True) / QMAX
+    return xp.maximum(s, SCALE_EPS).astype(xp.float32)
+
+
+def quantize(x, scale):
+    """``clip(round(x / scale), -127, 127)`` as int8. ``scale`` broadcasts
+    (typically the keepdims output of :func:`absmax_scale`)."""
+    xp = _xp(x)
+    q = xp.clip(xp.round(x / scale), -QMAX, QMAX)
+    return q.astype(xp.int8)
+
+
+def dequantize(q, scale):
+    """``q * scale`` in float32 (q may be int8 or the int32-widened psum
+    payload of the compressed all-reduce)."""
+    xp = _xp(q)
+    return q.astype(xp.float32) * scale
+
+
+def quantize_rows(table):
+    """Quantize a (rows, d) table row-wise.
+
+    Returns ``(q, scale)``: ``q`` (rows, d) int8 and ``scale`` (rows, 1)
+    float32 — the layout the quantized embedding stores keep per tier and
+    the Pallas gathers ride through their scalar-prefetch index maps.
+    """
+    scale = absmax_scale(table, axis=-1)
+    return quantize(table, scale), scale
+
+
+def dequantize_rows(q, scale):
+    """Inverse of :func:`quantize_rows`: (rows, d) int8 × (rows, 1) f32
+    -> (rows, d) float32."""
+    return dequantize(q, scale)

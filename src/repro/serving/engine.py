@@ -178,6 +178,13 @@ class EngineStats:
     device staging traffic, ``emb_staging_overflows`` — batches served via
     the chunked fallback) are live only for ``needs_staging`` stores. All
     zero for the default ``DenseStore``.
+
+    Byte counters are *wire* bytes (dtype-aware): ``emb_gather_bytes``
+    accounts observed gather traffic at the store's per-row wire cost
+    (``4·d`` fp32, ``d + 4`` int8 + scale), and the quantization pair
+    (``emb_quant_rows`` — rows quantized at init/adopt/refresh,
+    ``emb_quant_bytes_saved`` — gather bytes the int8 representation
+    avoided) is nonzero only for ``row_dtype="int8"`` stores.
     """
     n_requests: int = 0
     n_batches: int = 0
@@ -199,6 +206,9 @@ class EngineStats:
     emb_prefetched_rows: int = 0
     emb_h2d_bytes: int = 0
     emb_staging_overflows: int = 0
+    emb_gather_bytes: int = 0
+    emb_quant_rows: int = 0
+    emb_quant_bytes_saved: int = 0
 
     def __post_init__(self):
         self.latency_ms = deque(self.latency_ms or (),
@@ -369,6 +379,9 @@ class InferenceEngine:
             st.emb_prefetched_rows = ss.prefetched_rows
             st.emb_h2d_bytes = ss.h2d_bytes
             st.emb_staging_overflows = ss.staging_overflows
+            st.emb_gather_bytes = ss.gather_bytes
+            st.emb_quant_rows = ss.quant_rows
+            st.emb_quant_bytes_saved = ss.quant_bytes_saved
 
     # -- staging (out-of-HBM stores) ----------------------------------------
     @property

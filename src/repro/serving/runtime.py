@@ -68,6 +68,9 @@ class RuntimeStats:
     emb_prefetched_rows: int
     emb_h2d_bytes: int
     emb_staging_overflows: int
+    emb_gather_bytes: int
+    emb_quant_rows: int
+    emb_quant_bytes_saved: int
     per_model: dict[str, EngineStats]
 
 
@@ -218,7 +221,8 @@ class ServingRuntime:
         tot = dict(n_requests=0, n_batches=0, n_rejected=0, queue_depth=0,
                    cache_hits=0, cache_misses=0, emb_cache_refreshes=0,
                    emb_staged_rows=0, emb_prefetched_rows=0, emb_h2d_bytes=0,
-                   emb_staging_overflows=0)
+                   emb_staging_overflows=0, emb_gather_bytes=0,
+                   emb_quant_rows=0, emb_quant_bytes_saved=0)
         for eng in self._engines.values():
             st = eng.stats
             with st.lock:
@@ -234,6 +238,9 @@ class ServingRuntime:
                 tot["emb_prefetched_rows"] += st.emb_prefetched_rows
                 tot["emb_h2d_bytes"] += st.emb_h2d_bytes
                 tot["emb_staging_overflows"] += st.emb_staging_overflows
+                tot["emb_gather_bytes"] += st.emb_gather_bytes
+                tot["emb_quant_rows"] += st.emb_quant_rows
+                tot["emb_quant_bytes_saved"] += st.emb_quant_bytes_saved
         return RuntimeStats(
             n_models=len(self._engines),
             p50_ms=float(np.percentile(lat, 50)) if lat else 0.0,

@@ -6,6 +6,11 @@ sum the int32-widened payload over the data axis (wire bytes ≈ ¼ of f32),
 and dequantize with the shared scale. 8-bit rounding error only — validated
 in tests to ~1% relative against the exact psum.
 
+The quantize/dequantize math itself lives in ``repro.quant`` — the same
+symmetric-absmax codepath the quantized embedding stores use for their
+int8 rows; this module only adds what is collective-specific (blocking,
+the pmax'd shared scale, the int32-widened psum).
+
 Under GSPMD the DP all-reduce is normally implicit in the backward; this
 explicit form exists so deployments that are ICI-bound on the gradient
 reduction (§Roofline collective term) can opt in per-tensor.
@@ -17,6 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import quant
 from repro.compat import shard_map
 
 __all__ = ["compressed_psum_mean", "make_compressed_dp_step", "BLOCK"]
@@ -36,14 +42,17 @@ def compressed_psum_mean(x: jax.Array, axis_name: str) -> jax.Array:
     pad = (-n) % BLOCK
     flat = jnp.pad(flat, (0, pad))
     blocks = flat.reshape(-1, BLOCK)
-    # shared per-block scale across ranks (small f32 wire cost)
-    local_scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
-    scale = jnp.maximum(jax.lax.pmax(local_scale, axis_name), 1e-12)
-    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    # shared per-block scale across ranks (small f32 wire cost); the pmax
+    # sits between the local absmax and the eps floor so every rank
+    # quantizes against the same guarded scale
+    local_scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / quant.QMAX
+    scale = jnp.maximum(jax.lax.pmax(local_scale, axis_name),
+                        quant.SCALE_EPS)
+    q = quant.quantize(blocks, scale)
     # int8 payload summed in int32 (≤ 2^23 ranks before overflow)
     qs = jax.lax.psum(q.astype(jnp.int32), axis_name)
     ranks = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
-    out = (qs.astype(jnp.float32) * scale / ranks).reshape(-1)[:n]
+    out = (quant.dequantize(qs, scale) / ranks).reshape(-1)[:n]
     return out.reshape(shape).astype(dtype)
 
 

@@ -221,7 +221,7 @@ def test_refresh_promotes_hot_staged_rows_out_of_staging():
     ph = store.stage(ph, hot)                     # hot rows enter staging
     hot_rows = hot[0] + SPEC.offsets
     assert np.all(np.asarray(
-        store.pipeline.snapshot()[1][hot_rows] >= 0))
+        store.pipeline.snapshot()[2][hot_rows] >= 0))
     hosted.observe(hot)
     ph = store.refresh(ph)
     # promoted into the cache tier...

@@ -320,3 +320,185 @@ def test_fused_fm(b, k, d, dtype):
     tol = BF16_TOL if dtype == jnp.bfloat16 else TOL
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32), **tol)
+
+
+# ---------------------------------------------------------------------------
+# quantized (int8 rows + per-row fp32 scale) gathers
+# ---------------------------------------------------------------------------
+
+from repro import quant  # noqa: E402
+
+
+def _q8_split_cache(rng, mega, capacity):
+    """Quantize the mega-table once, carve a random hot set out of the
+    shared int8 grid (cache and backing hold verbatim copies + scales)."""
+    q, scale = quant.quantize_rows(mega)
+    n = mega.shape[0]
+    hot = np.sort(rng.choice(n, size=capacity, replace=False))
+    slot_of_row = np.full(n, -1, dtype=np.int32)
+    slot_of_row[hot] = np.arange(capacity, dtype=np.int32)
+    cache = jnp.take(q, jnp.asarray(hot), axis=0)
+    cache_scale = jnp.take(scale, jnp.asarray(hot), axis=0)
+    return q, scale, cache, cache_scale, jnp.asarray(slot_of_row)
+
+
+@pytest.mark.parametrize("capacity", [1, 16, 48])
+def test_two_level_q8_round_trip_bound(capacity):
+    """Per-element error of the dequantized gather stays within half the
+    int8 grid step (scale = absmax/127) of the fp32 dense lookup."""
+    rng = np.random.default_rng(capacity)
+    sizes, d, b = [13, 29, 6], 16, 24
+    _, mega, offsets = make_tables(rng, sizes, d, jnp.float32)
+    q, scale, cache, cscale, slot_of_row = _q8_split_cache(
+        rng, mega, capacity)
+    ids = make_ids(rng, sizes, b)
+    want = np.asarray(ops.multi_table_lookup(
+        ids, mega, offsets, strategy="jnp")).reshape(b, len(sizes), d)
+    got = np.asarray(ops.multi_table_lookup_cached_q8(
+        ids, cache, cscale, q, scale, slot_of_row, offsets,
+        strategy="jnp")).reshape(b, len(sizes), d)
+    rows = np.asarray(ids) + np.asarray(offsets)[None, :]
+    bound = np.asarray(scale)[rows] * 0.5 + 1e-7      # (b, k, 1) per row
+    assert np.all(np.abs(got - want) <= bound)
+
+
+@pytest.mark.parametrize("capacity", [1, 16, 48])
+def test_two_level_q8_kernel_matches_ref(capacity):
+    """The Pallas kernel (interpret mode) is bitwise equal to the jnp ref
+    twin — both select the int8 payload + scale, then multiply once."""
+    rng = np.random.default_rng(capacity)
+    sizes, d, b = [13, 29, 6], 16, 24
+    _, mega, offsets = make_tables(rng, sizes, d, jnp.float32)
+    q, scale, cache, cscale, slot_of_row = _q8_split_cache(
+        rng, mega, capacity)
+    ids = make_ids(rng, sizes, b)
+    got_jnp = ops.multi_table_lookup_cached_q8(
+        ids, cache, cscale, q, scale, slot_of_row, offsets, strategy="jnp")
+    got_pl = ops.multi_table_lookup_cached_q8(
+        ids, cache, cscale, q, scale, slot_of_row, offsets,
+        strategy="pallas", interpret=True)
+    np.testing.assert_array_equal(np.asarray(got_pl), np.asarray(got_jnp))
+
+
+@pytest.mark.parametrize("h", [1, 3])
+def test_two_level_q8_multihot_pooled(h):
+    """Pooled multi-hot: fp32 pooling after per-row dequant, masked slots
+    hit the zero row (int8 payload 0 -> exact 0.0), and the pooled error
+    stays within the sum of the contributing rows' half grid steps."""
+    rng = np.random.default_rng(h)
+    sizes, d, b = [13, 29, 6], 16, 12
+    k = len(sizes)
+    _, mega, offsets = make_tables(rng, sizes, d, jnp.float32)
+    mega_z = jnp.concatenate([mega, jnp.zeros((1, d), jnp.float32)], axis=0)
+    q, scale, cache, cscale, slot_of_row = _q8_split_cache(rng, mega_z, 16)
+    ids = jnp.asarray(
+        np.stack([rng.integers(0, n, size=(b, h)) for n in sizes], axis=1),
+        dtype=jnp.int32)
+    mask = jnp.asarray(rng.integers(0, 2, size=(b, k, h)), dtype=jnp.float32)
+    want = np.asarray(ops.multi_table_lookup_multihot(
+        ids, mask, mega_z, offsets, strategy="jnp")).reshape(b, k, d)
+    for strategy in ("jnp", "pallas"):
+        got = np.asarray(ops.multi_table_lookup_cached_q8_multihot(
+            ids, mask, cache, cscale, q, scale, slot_of_row, offsets,
+            strategy=strategy, interpret=True)).reshape(b, k, d)
+        rows = np.asarray(ids) + np.asarray(offsets)[None, :, None]
+        row_scale = np.asarray(scale)[rows][..., 0]    # (b, k, h)
+        bound = ((row_scale * 0.5 + 1e-7)
+                 * np.asarray(mask)).sum(axis=-1, keepdims=True)
+        assert np.all(np.abs(got - want) <= bound + 1e-6)
+
+
+@pytest.mark.parametrize("capacity", [1, 16, 40])
+def test_three_level_q8_staged_round_trip(capacity):
+    """Fully staged three-level q8 path: within the per-row grid-step
+    bound of the fp32 dense gather, and kernel == ref bitwise."""
+    rng = np.random.default_rng(capacity)
+    sizes, d, b = [13, 29, 6], 16, 24
+    _, mega, offsets = make_tables(rng, sizes, d, jnp.float32)
+    q, scale = quant.quantize_rows(mega)
+    n = mega.shape[0]
+    pick = rng.choice(n, size=n, replace=False)
+    hot, warm = np.sort(pick[:capacity]), np.sort(pick[capacity:])
+    slot_of_row = np.full(n, -1, dtype=np.int32)
+    slot_of_row[hot] = np.arange(capacity, dtype=np.int32)
+    smap = np.full(n, -1, dtype=np.int32)
+    smap[warm] = np.arange(n - capacity, dtype=np.int32)
+    cache = jnp.take(q, jnp.asarray(hot), axis=0)
+    cscale = jnp.take(scale, jnp.asarray(hot), axis=0)
+    staging = jnp.take(q, jnp.asarray(warm), axis=0)
+    sscale = jnp.take(scale, jnp.asarray(warm), axis=0)
+    ids = make_ids(rng, sizes, b)
+    want = np.asarray(ops.multi_table_lookup(
+        ids, mega, offsets, strategy="jnp")).reshape(b, len(sizes), d)
+    got_jnp = ops.multi_table_lookup_host_q8(
+        ids, cache, cscale, staging, sscale, jnp.asarray(slot_of_row),
+        jnp.asarray(smap), offsets, strategy="jnp")
+    got_pl = ops.multi_table_lookup_host_q8(
+        ids, cache, cscale, staging, sscale, jnp.asarray(slot_of_row),
+        jnp.asarray(smap), offsets, strategy="pallas", interpret=True)
+    np.testing.assert_array_equal(np.asarray(got_pl), np.asarray(got_jnp))
+    rows = np.asarray(ids) + np.asarray(offsets)[None, :]
+    bound = np.asarray(scale)[rows] * 0.5 + 1e-7
+    got = np.asarray(got_jnp).reshape(b, len(sizes), d)
+    assert np.all(np.abs(got - want) <= bound)
+
+
+def test_three_level_q8_zero_guards_unresolved_rows():
+    rng = np.random.default_rng(0)
+    sizes, d, b = [13, 29, 6], 16, 24
+    _, mega, offsets = make_tables(rng, sizes, d, jnp.float32)
+    q, scale = quant.quantize_rows(mega)
+    n = mega.shape[0]
+    pick = rng.choice(n, size=16, replace=False)
+    hot, warm = np.sort(pick[:8]), np.sort(pick[8:])
+    slot_of_row = np.full(n, -1, dtype=np.int32)
+    slot_of_row[hot] = np.arange(8, dtype=np.int32)
+    smap = np.full(n, -1, dtype=np.int32)
+    smap[warm] = np.arange(8, dtype=np.int32)
+    cache = jnp.take(q, jnp.asarray(hot), axis=0)
+    cscale = jnp.take(scale, jnp.asarray(hot), axis=0)
+    staging = jnp.take(q, jnp.asarray(warm), axis=0)
+    sscale = jnp.take(scale, jnp.asarray(warm), axis=0)
+    ids = make_ids(rng, sizes, b)
+    for strategy in ("jnp", "pallas"):
+        got = np.asarray(ops.multi_table_lookup_host_q8(
+            ids, cache, cscale, staging, sscale, jnp.asarray(slot_of_row),
+            jnp.asarray(smap), offsets, strategy=strategy,
+            interpret=True)).reshape(b, len(sizes), d)
+        rows = np.asarray(ids) + np.asarray(offsets)[None, :]
+        unresolved = (slot_of_row[rows] < 0) & (smap[rows] < 0)
+        assert unresolved.any()
+        assert np.all(got[unresolved] == 0.0)
+
+
+@pytest.mark.parametrize("h", [1, 3])
+def test_three_level_q8_multihot_matches_jnp_twin(h):
+    rng = np.random.default_rng(h)
+    sizes, d, b = [13, 29, 6], 16, 12
+    k = len(sizes)
+    _, mega, offsets = make_tables(rng, sizes, d, jnp.float32)
+    mega_z = jnp.concatenate([mega, jnp.zeros((1, d), jnp.float32)], axis=0)
+    q, scale = quant.quantize_rows(mega_z)
+    n = mega_z.shape[0]
+    pick = rng.choice(n, size=n, replace=False)
+    hot, warm = np.sort(pick[:16]), np.sort(pick[16:])
+    slot_of_row = np.full(n, -1, dtype=np.int32)
+    slot_of_row[hot] = np.arange(16, dtype=np.int32)
+    smap = np.full(n, -1, dtype=np.int32)
+    smap[warm] = np.arange(n - 16, dtype=np.int32)
+    cache = jnp.take(q, jnp.asarray(hot), axis=0)
+    cscale = jnp.take(scale, jnp.asarray(hot), axis=0)
+    staging = jnp.take(q, jnp.asarray(warm), axis=0)
+    sscale = jnp.take(scale, jnp.asarray(warm), axis=0)
+    ids = jnp.asarray(
+        np.stack([rng.integers(0, n_, size=(b, h)) for n_ in sizes], axis=1),
+        dtype=jnp.int32)
+    mask = jnp.asarray(rng.integers(0, 2, size=(b, k, h)), dtype=jnp.float32)
+    got_jnp = ops.multi_table_lookup_host_q8_multihot(
+        ids, mask, cache, cscale, staging, sscale, jnp.asarray(slot_of_row),
+        jnp.asarray(smap), offsets, strategy="jnp")
+    got_pl = ops.multi_table_lookup_host_q8_multihot(
+        ids, mask, cache, cscale, staging, sscale, jnp.asarray(slot_of_row),
+        jnp.asarray(smap), offsets, strategy="pallas", interpret=True)
+    np.testing.assert_allclose(np.asarray(got_pl), np.asarray(got_jnp),
+                               rtol=1e-6, atol=1e-6)
