@@ -12,6 +12,11 @@ every CTR model, serving the fp32-trained params through a
 ``row_dtype="int8"`` ``CachedStore`` must stay within **AUC delta < 1e-3
 and per-score |Δ| < 1e-2** of the fp32 dense plan (DeepLight-style CTR
 robustness to 8-bit rows). Hard-asserted; CI runs it in the tier1 matrix.
+
+``--quant-mlp`` / ``run_quant_mlp`` stacks the other quantization half on
+top: int8 rows *and* ``compute_dtype="int8"`` MLP matmuls together, same
+budget, same hard asserts — the end-to-end contract for running fully
+quantized in production.
 """
 
 from __future__ import annotations
@@ -138,12 +143,70 @@ def run_quant(quick: bool = False) -> dict:
     return results
 
 
+def run_quant_mlp(quick: bool = False) -> dict:
+    """Accuracy-parity gate for the *combined* quantization story.
+
+    The harshest realistic configuration: int8 embedding rows (PR 7's
+    store tier) **and** int8 MLP matmuls (``compute_dtype="int8"``)
+    stacked, scored against the all-fp32 dense dual plan. For every CTR
+    model: short-train fp32 params, then hard-assert AUC delta < 1e-3 and
+    per-score |Δ| < 1e-2. Head and cross GEMMs stay fp32 by design, which
+    is what keeps the stacked error inside the same budget as either
+    half alone.
+    """
+    from repro.embedding import CachedStore
+
+    results = {}
+    schema = CRITEO.scaled(MAX_FIELD)
+    val = synthetic_batch(schema, 10_000, 4096)
+    labels = np.asarray(val["labels"])
+    models = ["dcn"] if quick else list(CTR_MODELS)
+    for model_name in models:
+        spec = ctr_spec(model_name, "criteo", 16, 128, max_field=MAX_FIELD)
+        model = CTR_MODELS[model_name](spec)
+        params = model.init(jax.random.PRNGKey(0))
+        params = _short_train(model, params, schema,
+                              steps=20 if quick else 40)
+
+        plan = compile_plan(model, params, "dual",
+                            int(val["ids"].shape[0]))
+        logits = np.asarray(plan(val["ids"])).reshape(-1)
+        sc_fp32 = 1.0 / (1.0 + np.exp(-logits))
+
+        qmodel = CTR_MODELS[model_name](spec)
+        store = CachedStore(qmodel.spec.embedding_spec(), capacity=4096,
+                            row_dtype="int8")
+        qparams = qmodel.use_store(store, params)
+        qplan = compile_plan(qmodel, qparams, "dual",
+                             int(val["ids"].shape[0]),
+                             compute_dtype="int8")
+        qlogits = np.asarray(qplan(val["ids"])).reshape(-1)
+        sc_q8 = 1.0 / (1.0 + np.exp(-qlogits))
+
+        auc_fp32 = roc_auc(labels, sc_fp32)
+        auc_q8 = roc_auc(labels, sc_q8)
+        d_auc = abs(auc_fp32 - auc_q8)
+        d_score = float(np.abs(sc_fp32 - sc_q8).max())
+        assert d_auc < 1e-3, (model_name, d_auc)
+        assert d_score < 1e-2, (model_name, d_score)
+        emit(f"parity_q8mlp/{model_name}_criteo", 0.0,
+             f"auc_fp32={auc_fp32:.4f} auc_int8={auc_q8:.4f} "
+             f"dAUC={d_auc:.2e} max|dscore|={d_score:.2e}")
+        results[f"{model_name}_criteo"] = (auc_fp32, auc_q8,
+                                           d_auc, d_score)
+    return results
+
+
 if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--quant", action="store_true",
                     help="gate the int8 embedding tier against the fp32 "
                          "dense plan instead of naive-vs-dual parity")
+    ap.add_argument("--quant-mlp", action="store_true",
+                    help="gate int8 rows + int8 MLP matmuls stacked "
+                         "against the all-fp32 dense plan")
     ap.add_argument("--quick", action="store_true")
     a = ap.parse_args()
-    (run_quant if a.quant else run)(quick=a.quick)
+    fn = run_quant_mlp if a.quant_mlp else (run_quant if a.quant else run)
+    fn(quick=a.quick)

@@ -38,6 +38,14 @@ def _structural_cells(doc: dict) -> dict:
 
 def diff(baseline: dict, fresh: dict) -> list[str]:
     base, new = _structural_cells(baseline), _structural_cells(fresh)
+    # scope the comparison to suites the baseline actually pins: each
+    # committed baseline (BENCH_embedding.json, BENCH_mlp.json, ...) owns
+    # its suites, and a full `run.py --json` dump carries every suite's
+    # cells — without this, each baseline would reject the others' cells
+    # as "absent from baseline"
+    suites = {name.split("/", 1)[0] for name in base}
+    new = {name: s for name, s in new.items()
+           if name.split("/", 1)[0] in suites}
     problems = []
     for name in sorted(set(base) - set(new)):
         problems.append(f"{name}: cell missing from fresh run")

@@ -1,0 +1,159 @@
+"""Quantized-compute sweep: int8 MLP matmuls across the four CTR models.
+
+The dense-branch counterpart of ``embedding_host``'s wire-format pair:
+per model, compile the fp32 plan and the ``compute_dtype="int8"`` plan at
+the same batch and pin the structural story of the quantized path —
+
+  * **weight bytes**: the int8 plan's dense-branch weights shrink from
+    ``4·fan_in·fan_out`` to ``fan_in·fan_out + 4·fan_out`` (int8 payload +
+    per-output-channel fp32 scales). The ratio is **hard-asserted >= 3.5x**
+    per model — the acceptance contract for this PR's bytes claim;
+  * **plan coexistence**: both plans land in one engine-style cache under
+    distinct ``PlanKey``s (``compute_dtype`` is part of plan identity), so
+    a deployment can serve fp32 and int8 side by side;
+  * **score sanity**: the int8 plan's scores stay within the model-level
+    parity budget (|Δ| < 1e-2) of fp32 on the same batch — the trained
+    gate lives in ``accuracy_parity --quant-mlp``; this is the untrained
+    structural echo of it;
+  * **refresh stays recompile-free**: an ``InferenceEngine`` serving the
+    full stack (int8 ``CachedStore`` rows + int8 compute) takes a
+    mid-stream ``refresh_cache()`` with ``cache_misses`` unchanged —
+    weights are baked at plan compile, store rows are runtime inputs, and
+    neither invalidates the other.
+
+The returned dict separates ``structural`` (deterministic counters diffed
+against the committed ``BENCH_mlp.json`` by ``benchmarks/diff_baseline``)
+from noise-bound ``timing``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+from repro.configs import ctr_spec
+from repro.core import compile_plan
+from repro.data.synthetic import CRITEO, synthetic_batch
+from repro.models.ctr import CTR_MODELS
+
+from .common import emit, time_fn
+
+RATIO_FLOOR = 3.5
+
+
+def _plan_cell(model_name: str, vocab: int, batch: int, hidden: int) -> dict:
+    spec = ctr_spec(model_name, "criteo", 16, hidden, max_field=vocab)
+    model = CTR_MODELS[model_name](spec)
+    params = model.init(jax.random.PRNGKey(0))
+    ids = synthetic_batch(CRITEO.scaled(vocab), 7, batch)["ids"]
+
+    plans = {}
+    for dtype in ("fp32", "int8"):
+        plans[dtype] = compile_plan(model, params, "dual", batch,
+                                    compute_dtype=dtype)
+    # compute_dtype is part of plan identity: the two plans must coexist
+    # in any key-addressed cache, never alias
+    keys = {dtype: p.key for dtype, p in plans.items()}
+    assert keys["fp32"] != keys["int8"], keys
+
+    scores = {dtype: np.asarray(p(ids)).reshape(-1)
+              for dtype, p in plans.items()}
+    d_score = float(np.abs(scores["fp32"] - scores["int8"]).max())
+    assert d_score < 1e-2, (model_name, d_score)
+
+    st = plans["int8"].stats
+    q8_bytes = int(st.mlp_quant_weight_bytes)
+    saved = int(st.mlp_quant_weight_bytes_saved)
+    fp32_bytes = q8_bytes + saved           # saved = 4·in·out − q8 payload
+    ratio = fp32_bytes / q8_bytes
+    assert ratio >= RATIO_FLOOR, (model_name, ratio, fp32_bytes, q8_bytes)
+    assert plans["fp32"].stats.mlp_quant_matmuls == 0
+
+    us = {dtype: time_fn(p, ids, reps=3, warmup=1)
+          for dtype, p in plans.items()}
+    emit(f"mlp_quant/{model_name}/b{batch}/int8", us["int8"],
+         f"fp32_us={us['fp32']:.1f},matmuls={st.mlp_quant_matmuls},"
+         f"w_ratio={ratio:.2f},max|dscore|={d_score:.2e}")
+    return {
+        "structural": {
+            "q8_matmuls": int(st.mlp_quant_matmuls),
+            "q8_weight_bytes": q8_bytes,
+            "q8_weight_bytes_saved": saved,
+            "fp32_weight_bytes": fp32_bytes,
+            "weight_bytes_ratio": round(ratio, 6),
+            "plan_keys_distinct": True,     # asserted above
+            "score_within_budget": True,    # asserted above (<1e-2)
+        },
+        "timing": {"fp32_us": us["fp32"], "int8_us": us["int8"],
+                   "max_dscore": d_score},
+    }
+
+
+def _refresh_cell(model_name: str, vocab: int, batch: int, n: int) -> dict:
+    """Full quantized stack under a mid-stream refresh: zero recompiles."""
+    from repro.embedding import CachedStore
+    from repro.serving import FixedBatch, InferenceEngine
+
+    spec = ctr_spec(model_name, "criteo", 16, 256, max_field=vocab)
+    model = CTR_MODELS[model_name](spec)
+    params = model.init(jax.random.PRNGKey(0))
+    store = CachedStore(spec.embedding_spec(), capacity=batch * 8,
+                        row_dtype="int8")
+    eng = InferenceEngine(model, params, policy=FixedBatch(batch),
+                          store=store, compute_dtype="int8")
+    ids = synthetic_batch(CRITEO.scaled(vocab), 11, n)["ids"]
+    waves = np.array_split(np.asarray(ids), 2)
+
+    eng.submit_many(list(waves[0]))
+    eng.serve_pending()
+    misses_before = eng.stats.cache_misses
+    eng.refresh_cache()                     # double-buffered tensor swap
+    eng.submit_many(list(waves[1]))
+    eng.serve_pending()
+    eng.flush()
+    misses_after = eng.stats.cache_misses
+
+    recompile_free = misses_after == misses_before
+    assert recompile_free, (misses_before, misses_after)
+    s = eng.stats
+    emit(f"mlp_quant/{model_name}/refresh", 0.0,
+         f"cache_misses={misses_after},refreshes={s.emb_cache_refreshes},"
+         f"q8_matmuls={s.mlp_quant_matmuls},recompile_free={recompile_free}")
+    return {
+        "structural": {
+            "cache_misses": int(misses_after),
+            "refreshes": int(s.emb_cache_refreshes),
+            "q8_matmuls": int(s.mlp_quant_matmuls),
+            "q8_weight_bytes": int(s.mlp_quant_weight_bytes),
+            "recompile_free": bool(recompile_free),
+        },
+        "timing": {"p50_ms": float(s.p50_ms), "p99_ms": float(s.p99_ms)},
+    }
+
+
+def run(quick: bool = False, dry: bool = False) -> dict:
+    if dry:
+        vocab, batch, n, hidden = 2_000, 8, 32, 64
+        models = list(CTR_MODELS)
+    elif quick:
+        vocab, batch, n, hidden = 20_000, 32, 128, 128
+        models = list(CTR_MODELS)
+    else:
+        vocab, batch, n, hidden = 100_000, 256, 1_024, 256
+        models = list(CTR_MODELS)
+    out = {}
+    for name in models:
+        out[f"{name}_plans"] = _plan_cell(name, vocab, batch, hidden)
+    # one refresh cell is enough: the mechanism (baked weights vs runtime
+    # store inputs) is model-agnostic
+    out["refresh_int8_stack"] = _refresh_cell(models[0], vocab, batch, n)
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--dry", action="store_true")
+    args = ap.parse_args()
+    run(quick=args.quick, dry=args.dry)

@@ -22,8 +22,9 @@ def load(out_dir: str = "experiments/dryrun") -> list[dict]:
 
 def table(recs: list[dict], mesh: str = "pod") -> str:
     rows = ["| arch | shape | compute s | memory s | collective s | "
-            "dominant | useful ratio | roofline frac | fits 16G |",
-            "|---|---|---|---|---|---|---|---|---|"]
+            "dominant | useful ratio | roofline frac | AI f32 | AI int8 | "
+            "fits 16G |",
+            "|---|---|---|---|---|---|---|---|---|---|---|"]
     for r in sorted(recs, key=lambda r: (r["arch"],
                                          ORDER.index(r["shape"])
                                          if r["shape"] in ORDER else 9)):
@@ -32,10 +33,15 @@ def table(recs: list[dict], mesh: str = "pod") -> str:
         rl = r["roofline"]
         tmax = max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
         frac = rl["compute_s"] / tmax if tmax else 0.0
+        # int8 companion columns default to 0 for records written before
+        # the quantized-compute roofline landed
+        ai = rl.get("arith_intensity", 0.0)
+        ai8 = rl.get("arith_intensity_int8", 0.0)
         rows.append(
             f"| {r['arch']} | {r['shape']} | {rl['compute_s']:.4g} | "
             f"{rl['memory_s']:.4g} | {rl['collective_s']:.4g} | "
             f"{rl['dominant']} | {rl['useful_ratio']:.2f} | {frac:.2f} | "
+            f"{ai:.1f} | {ai8:.1f} | "
             f"{'Y' if rl['fits_hbm'] else 'N'} |")
     return "\n".join(rows)
 
@@ -50,12 +56,28 @@ def run(quick: bool = False) -> dict:
              tmax * 1e6,
              f"dominant={rl['dominant']} "
              f"frac={rl['compute_s']/tmax if tmax else 0:.2f}")
+        # int8 twin bound: quantized matmuls at the doubled MXU peak plus
+        # the shrunken weights-read HBM term (.get(): pre-quantization
+        # dry-run records carry no int8 fields — emit 0-valued lines
+        # rather than fail so stale artifacts stay renderable)
+        c8 = rl.get("compute_s_int8", 0.0)
+        m8 = rl.get("memory_s_int8", 0.0)
+        tmax8 = max(c8, m8, rl["collective_s"]) if (c8 or m8) else 0.0
+        emit(f"roofline_int8/{r['arch']}/{r['shape']}/{r['mesh']}",
+             tmax8 * 1e6,
+             f"ai={rl.get('arith_intensity', 0.0):.1f} "
+             f"ai_int8={rl.get('arith_intensity_int8', 0.0):.1f}")
     if ok:
         print(table(recs))
     else:
-        emit("roofline/no_records", 0.0,
-             "run: python -m repro.launch.dryrun --all --mesh pod "
-             "--out experiments/dryrun")
+        # NaN placeholder, not a 0.0 metric: a zero roofline bound reads
+        # as "free step" to anything diffing the emitted numbers — the
+        # skipped flag lets callers (and diff_baseline) tell "suite ran
+        # with no dry-run artifacts" from "suite measured zero"
+        emit("roofline/no_records", float("nan"),
+             "skipped=1 run: python -m repro.launch.dryrun --all "
+             "--mesh pod --out experiments/dryrun")
+        return {"n_records": 0, "skipped": True}
     return {"n_records": len(ok)}
 
 

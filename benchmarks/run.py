@@ -31,9 +31,9 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (accuracy_parity, breakdown, e2e_speedup, embedding_cache,
-                   embedding_host, embedding_sensitivity, roofline_report,
-                   scheduling, serving_async, serving_batching, serving_mesh,
-                   workload_allocation)
+                   embedding_host, embedding_sensitivity, mlp_quant,
+                   roofline_report, scheduling, serving_async,
+                   serving_batching, serving_mesh, workload_allocation)
     suites = {
         "accuracy_parity": accuracy_parity,       # Table I
         "e2e_speedup": e2e_speedup,               # Fig. 7 / Table II
@@ -41,6 +41,7 @@ def main() -> None:
         "embedding_sensitivity": embedding_sensitivity,  # Fig. 10
         "embedding_cache": embedding_cache,       # store tiering sweep
         "embedding_host": embedding_host,         # out-of-HBM host tier
+        "mlp_quant": mlp_quant,                   # int8 dense-branch compute
         "workload_allocation": workload_allocation,      # Fig. 11
         "scheduling": scheduling,                 # Fig. 12/13
         "serving_batching": serving_batching,     # Fig. 7 serving policies

@@ -1,6 +1,7 @@
 """TPU v5e hardware constants (per chip) used by the roofline model."""
 
 PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+PEAK_OPS_INT8 = 394e12          # OP/s — the MXU doubles throughput at int8
 HBM_BW = 819e9                  # B/s
 ICI_BW_PER_LINK = 50e9          # B/s (per the assignment: ~50 GB/s/link)
 HBM_BYTES = 16 * 2**30          # 16 GiB

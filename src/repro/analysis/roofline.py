@@ -50,6 +50,16 @@ class RooflineReport:
     fits_hbm: bool
     n_micro: int
     note: str = ""
+    # int8 companion terms (quantized compute, ``compute_dtype="int8"``):
+    # the MXU's int8 peak doubles bf16, and the weights-read HBM component
+    # shrinks to ~1/4 (int8 payload + per-channel scales). Arithmetic
+    # intensity (FLOP per HBM byte) for both dtypes locates each cell
+    # against the machine balance point (PEAK / HBM_BW); defaulted so
+    # pre-existing dry-run records still deserialize.
+    compute_s_int8: float = 0.0
+    memory_s_int8: float = 0.0
+    arith_intensity: float = 0.0
+    arith_intensity_int8: float = 0.0
 
     def step_time_bound_s(self) -> float:
         """Roofline lower bound on step time (no overlap assumption)."""
@@ -76,6 +86,17 @@ def analyze_cell(arch: str, shape: str, mesh_name: str, chips: int,
     compute_s = stats.dot_flops / hw.PEAK_FLOPS_BF16
     memory_s = an.hbm_bytes_per_device / hw.HBM_BW
     collective_s = stats.total_collective_bytes / hw.ICI_BW_PER_LINK
+
+    # int8 twin: matmuls at the doubled MXU peak, weight reads at ~1/4 the
+    # bytes (the only HBM component quantized compute shrinks — activations
+    # and embedding gathers are unchanged by the matmul dtype)
+    w_read = float(an.components.get("weights_read", 0.0))
+    hbm_int8 = an.hbm_bytes_per_device - 0.75 * w_read
+    compute_s_int8 = stats.dot_flops / hw.PEAK_OPS_INT8
+    memory_s_int8 = hbm_int8 / hw.HBM_BW
+    ai = (stats.dot_flops / an.hbm_bytes_per_device
+          if an.hbm_bytes_per_device else 0.0)
+    ai_int8 = stats.dot_flops / hbm_int8 if hbm_int8 else 0.0
     terms = {"compute": compute_s, "memory": memory_s,
              "collective": collective_s}
     dominant = max(terms, key=terms.get)
@@ -103,4 +124,8 @@ def analyze_cell(arch: str, shape: str, mesh_name: str, chips: int,
         out_bytes=ma.output_size_in_bytes,
         fits_hbm=live <= hw.HBM_BYTES,
         n_micro=n_micro,
+        compute_s_int8=compute_s_int8,
+        memory_s_int8=memory_s_int8,
+        arith_intensity=ai,
+        arith_intensity_int8=ai_int8,
     )

@@ -12,7 +12,8 @@ convenience).
 
 from .dual_parallel import (BRANCH_ORDERS, LEVELS, DualParallelExecutor,
                             ExecutorStats)
-from .plan import InferencePlan, PlanKey, compile_plan, place_params
+from .plan import (COMPUTE_DTYPES, InferencePlan, PlanKey, compile_plan,
+                   place_params, plan_key_for)
 from repro.embedding import (CachedStore, DenseStore, EmbeddingStore,
                              FusedEmbeddingCollection, FusedEmbeddingSpec,
                              HostBackedStore, StoreStats,
@@ -26,10 +27,12 @@ __all__ = [
     "BRANCH_ORDERS",
     "DualParallelExecutor",
     "ExecutorStats",
+    "COMPUTE_DTYPES",
     "InferencePlan",
     "PlanKey",
     "compile_plan",
     "place_params",
+    "plan_key_for",
     "FusedEmbeddingCollection",
     "FusedEmbeddingSpec",
     "EmbeddingStore",

@@ -53,6 +53,14 @@ class ExecutorStats:
     # ("dense(rows=...,d=...)" / "cached(C=...,rows=...,d=...)"), stamped by
     # compile_plan; live hit-rate counters are on EngineStats, not here
     embedding_store: str = "none"
+    # dense-branch compute dtype the graph was emitted with, plus the
+    # structural quantized-matmul counters emit_mlp_ops stamps in
+    # OpGraph.meta (weight bytes count the int8 payload + per-channel
+    # scales; "saved" is vs the 4 B/element fp32 matrix)
+    compute_dtype: str = "fp32"
+    mlp_quant_matmuls: int = 0
+    mlp_quant_weight_bytes: int = 0
+    mlp_quant_weight_bytes_saved: int = 0
 
 
 class DualParallelExecutor:
@@ -108,6 +116,12 @@ class DualParallelExecutor:
                                if getattr(op, "kernel", None)),
             schedule_policy=sched.policy,
             queue=tuple(sched.queue),
+            compute_dtype=graph.meta.get("compute_dtype", "fp32"),
+            mlp_quant_matmuls=graph.meta.get("mlp_quant_matmuls", 0),
+            mlp_quant_weight_bytes=graph.meta.get(
+                "mlp_quant_weight_bytes", 0),
+            mlp_quant_weight_bytes_saved=graph.meta.get(
+                "mlp_quant_weight_bytes_saved", 0),
         )
         return graph, order
 

@@ -91,6 +91,10 @@ class OpGraph:
         self.graph_inputs = tuple(graph_inputs)
         self.ops: list[Op | FusedOp] = []
         self._producers: dict[str, str] = {}   # value edge -> op name
+        # free-form structural annotations the emitters stamp at build time
+        # (e.g. emit_mlp_ops' quantized-compute counters); carried through
+        # fusion and surfaced in ExecutorStats — never read by execution
+        self.meta: dict[str, Any] = {}
 
     # -- construction ------------------------------------------------------
     def add_input(self, name: str) -> None:
@@ -255,6 +259,7 @@ def fuse_non_gemm(graph: OpGraph, use_kernels: bool = True) -> OpGraph:
     emitted as their own group so the Pallas kernel can serve them.
     """
     fused = OpGraph(graph.graph_inputs)
+    fused.meta = dict(graph.meta)
     ops = graph.ops
     i = 0
     group_id = 0

@@ -50,7 +50,11 @@ from .dual_parallel import (BRANCH_ORDERS, LEVELS, DualParallelExecutor,
 from .opgraph import OpGraph
 
 __all__ = ["PlanKey", "InferencePlan", "compile_plan", "plan_key_for",
-           "place_params"]
+           "place_params", "COMPUTE_DTYPES"]
+
+#: dense-branch compute dtypes a plan can be compiled at: fp32 GEMMs, or
+#: int8 matmuls with fused in-kernel dequant (kernels.dense_matmul_q8)
+COMPUTE_DTYPES = ("fp32", "int8")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,6 +66,7 @@ class PlanKey:
     branch_order: str = "longer_first"
     sharded: bool = False
     store: str = "dense"
+    compute_dtype: str = "fp32"
 
 
 def _store_describe(model) -> str:
@@ -74,14 +79,16 @@ def _store_describe(model) -> str:
 
 def plan_key_for(model, level: str, batch_size: int,
                  branch_order: str = "longer_first",
-                 sharded: bool = False) -> PlanKey:
+                 sharded: bool = False,
+                 compute_dtype: str = "fp32") -> PlanKey:
     """The single definition of plan/cache identity — used both by
     :func:`compile_plan` (stamped on the plan) and by engines keying their
     caches, so the two can never drift."""
     return PlanKey(model=getattr(model.spec, "name", type(model).__name__),
                    level=level, batch_size=int(batch_size),
                    branch_order=branch_order, sharded=sharded,
-                   store=_store_describe(model))
+                   store=_store_describe(model),
+                   compute_dtype=compute_dtype)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -204,8 +211,8 @@ def compile_plan(model, params: Any, level: str = "dual",
                  donate: bool = False,
                  branch_order: str = "longer_first",
                  model_axis: str = "model",
-                 runtime_provider: Callable[[], dict] | None = None
-                 ) -> InferencePlan:
+                 runtime_provider: Callable[[], dict] | None = None,
+                 compute_dtype: str = "fp32") -> InferencePlan:
     """Compile one (model, level, batch shape) into an InferencePlan.
 
     Args:
@@ -235,16 +242,30 @@ def compile_plan(model, params: Any, level: str = "dual",
             the old baked-constant behavior. ``InferenceEngine`` passes a
             provider reading its live params so a ``refresh_cache()``
             tensor swap retargets every cached plan with zero recompiles.
+        compute_dtype: ``"fp32"`` (default) or ``"int8"`` — quantize every
+            dense-branch matmul: weights per output channel *once here at
+            compile* (baked int8 constants — MLP weights are not runtime
+            inputs, so refresh stays recompile-free), activations per row
+            dynamically inside the fused ``dense_matmul_q8`` kernel. Part
+            of the plan's cache identity, so quantized and fp32 plans
+            coexist in one engine cache.
     """
     if level not in LEVELS:
         raise ValueError(f"level must be one of {LEVELS}, got {level!r}")
     if branch_order not in BRANCH_ORDERS:
         raise ValueError(f"branch_order must be one of {BRANCH_ORDERS}, "
                          f"got {branch_order!r}")
+    if compute_dtype not in COMPUTE_DTYPES:
+        raise ValueError(f"compute_dtype must be one of {COMPUTE_DTYPES}, "
+                         f"got {compute_dtype!r}")
     if mesh is not None:
         params = place_params(model, params, mesh, model_axis)
 
-    executor = DualParallelExecutor(model.build_graph, level=level,
+    builder = model.build_graph
+    if compute_dtype != "fp32":
+        def builder(p, lvl, _build=model.build_graph):
+            return _build(p, lvl, compute_dtype=compute_dtype)
+    executor = DualParallelExecutor(builder, level=level,
                                     branch_order=branch_order)
     t0 = time.perf_counter()
     graph, order = executor.prepare(params)
@@ -311,9 +332,11 @@ def compile_plan(model, params: Any, level: str = "dual",
     compile_ms = (time.perf_counter() - t0) * 1e3
 
     key = plan_key_for(model, level, batch_size, branch_order,
-                       sharded=mesh is not None)
+                       sharded=mesh is not None,
+                       compute_dtype=compute_dtype)
     stats = executor.stats
     stats.embedding_store = _store_describe(model)
+    stats.compute_dtype = compute_dtype
     return InferencePlan(key=key, stats=stats, graph=graph,
                          order=tuple(order), step=step, n_fields=n_fields,
                          donate=donate, compile_ms=compile_ms,

@@ -3,11 +3,13 @@
   multi_table_lookup.py  fused embedding gather (paper Alg. 1)  [C2, C3]
   fused_cross.py         DCN/DCNv2 cross elementwise tails      [C5]
   fused_fm.py            DeepFM FM 2nd-order term               [C5]
+  dense_matmul.py        int8 MLP matmul with fused dequant epilogue
   ops.py                 public wrappers + strategy dispatch
   ref.py                 reference oracles (incl. literal Alg. 1)
 """
 
 from .ops import (
+    dense_matmul_q8,
     fused_cross_v1,
     fused_cross_v2,
     fused_fm_second_order,
@@ -20,6 +22,7 @@ from .ops import (
 )
 
 __all__ = [
+    "dense_matmul_q8",
     "fused_cross_v1",
     "fused_cross_v2",
     "fused_fm_second_order",

@@ -21,7 +21,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import quant
+
 from . import ref
+from .dense_matmul import dmm_q8
 from .fused_cross import fused_cross_v1, fused_cross_v2
 from .fused_fm import fused_fm_second_order
 from .multi_table_lookup import (
@@ -46,6 +49,7 @@ __all__ = [
     "multi_table_lookup_host_multihot",
     "multi_table_lookup_host_q8",
     "multi_table_lookup_host_q8_multihot",
+    "dense_matmul_q8",
     "fused_cross_v1",
     "fused_cross_v2",
     "fused_fm_second_order",
@@ -495,6 +499,56 @@ def multi_table_lookup_host_q8_multihot(ids: jax.Array, mask: jax.Array,
                                         staging, staging_scale, hot=h,
                                         interpret=interpret)
         return out.reshape(b, k * d)
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
+# jitted so the epilogue's fp32 multiply-add chain contracts exactly like
+# the (always-jitted) pallas kernel's — eager numpy-style evaluation would
+# break the bitwise jnp-vs-interpret parity the kernel tests assert
+_ref_dense_matmul_q8 = jax.jit(ref.ref_dense_matmul_q8,
+                               static_argnames=("relu",))
+
+
+def dense_matmul_q8(h: jax.Array, wq: jax.Array, wscale: jax.Array,
+                    bias: jax.Array, *, relu: bool = True,
+                    strategy: str = "auto",
+                    interpret: bool | None = None) -> jax.Array:
+    """Quantized dense layer: dynamic int8 activations × static int8
+    weights, int32 accumulate, dequant + bias (+ ReLU) fused in the
+    epilogue.
+
+    The compute twin of the q8 gathers: weights arrive already quantized
+    per output channel (once, at plan compile — see
+    ``quant.quantize_channels``), activations are quantized per row *here*
+    because their range is batch-dependent. Both strategies share that
+    quantizer, so pallas-vs-jnp differ only in how the identical int8
+    arithmetic is lowered. Not bit-exact with the fp32 GEMM (two absmax
+    round-trips); the accuracy-parity benchmark gates the model-level
+    impact (``accuracy_parity.py --quant-mlp``).
+
+    Args:
+        h:      (b, fan_in) fp32 activations.
+        wq:     (fan_in, fan_out) int8 per-channel quantized weights.
+        wscale: (1, fan_out) fp32 per-channel weight scales.
+        bias:   (fan_out,) fp32.
+        relu:   fuse the ReLU epilogue (off for pre-logit layers).
+
+    Returns:
+        (b, fan_out) float32 layer output.
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+    if strategy == "auto":
+        strategy = "pallas" if on_tpu() else "jnp"
+    hscale = quant.absmax_scale(h, axis=-1)
+    hq = quant.quantize(h, hscale)
+    bias2d = bias.reshape(1, -1)
+    if strategy == "jnp":
+        return _ref_dense_matmul_q8(hq, hscale, wq, wscale, bias2d,
+                                    relu=relu)
+    if strategy == "pallas":
+        return dmm_q8(hq, hscale, wq, wscale, bias2d, relu=relu,
+                      interpret=interpret)
     raise ValueError(f"unknown strategy {strategy!r}")
 
 

@@ -11,6 +11,7 @@ scalar Python, used only at tiny sizes to anchor the vectorized oracles.
 from __future__ import annotations
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 
@@ -215,6 +216,32 @@ def ref_three_level_gather_q8(flat_rows, slot_of_row, staging_slot_of_row,
                   jnp.take(cache_scale, jnp.maximum(cslots, 0), axis=0),
                   jnp.take(staging_scale, jnp.maximum(sslots, 0), axis=0))
     return q * s
+
+
+def ref_dense_matmul_q8(hq, hscale, wq, wscale, bias, relu: bool = True):
+    """Quantized dense-layer oracle — the int8 MLP matmul.
+
+    Mirrors ``dense_matmul_q8``'s arithmetic *exactly* (int8×int8→int32
+    dot, widen to fp32, row scale then channel scale then bias, optional
+    ReLU), so the kernel-vs-ref comparison in interpret mode is bitwise.
+
+    Args:
+        hq:     (b, fan_in) int8 per-row quantized activations.
+        hscale: (b, 1) fp32 per-row activation scales.
+        wq:     (fan_in, fan_out) int8 per-channel quantized weights.
+        wscale: (1, fan_out) fp32 per-channel weight scales.
+        bias:   (1, fan_out) fp32.
+        relu:   apply the fused ReLU epilogue.
+
+    Returns:
+        (b, fan_out) float32 layer output.
+    """
+    acc = jax.lax.dot_general(hq, wq, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    out = acc.astype(jnp.float32) * hscale * wscale + bias
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out
 
 
 # ---------------------------------------------------------------------------

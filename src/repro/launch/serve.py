@@ -90,6 +90,9 @@ def _engine_line(name, eng, scores, store, use_async):
     if s.emb_quant_rows:
         emb += (f" gather={s.emb_gather_bytes}B "
                 f"quant_saved={s.emb_quant_bytes_saved}B")
+    if s.mlp_quant_matmuls:
+        emb += (f" q8_matmuls={s.mlp_quant_matmuls} "
+                f"w_saved={s.mlp_quant_weight_bytes_saved}B")
     mode = "async" if use_async else "sync"
     print(f"[serve:{mode}] {name}: {s.n_requests} requests in "
           f"{s.n_batches} batches  p50={s.p50_ms:.1f}ms "
@@ -134,7 +137,8 @@ def serve_ctr(args) -> None:
                              "full-precision")
         rt.add_model(name, model, params, level=args.level,
                      policy=_make_policy(args), store=store,
-                     refresh_every=args.refresh_every)
+                     refresh_every=args.refresh_every,
+                     compute_dtype=args.mlp_dtype)
     rt.warmup()
     ids = _traffic(args, schema)
 
@@ -219,6 +223,13 @@ def main() -> None:
                          "stores rows quantized (absmax + per-row fp32 "
                          "scale), ~4x less gather/h2d traffic, dequant "
                          "in-kernel; fp32 (default) stays bit-exact")
+    ap.add_argument("--mlp-dtype", default="fp32",
+                    choices=["fp32", "int8"],
+                    help="dense-branch compute dtype: int8 runs every MLP "
+                         "matmul quantized (per-channel int8 weights baked "
+                         "at plan compile, per-row int8 activations, fused "
+                         "in-kernel dequant+bias+ReLU); fp32 (default) "
+                         "stays bit-exact")
     ap.add_argument("--refresh-every", type=int, default=None,
                     help="per-engine: rebuild the hot cache every N served "
                          "batches (plan cache survives — tensor swap)")

@@ -29,6 +29,7 @@ from repro.core.opgraph import register_fused_kernel
 from repro.embedding import runtime_edge
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
+from repro.quant import quantize_channels
 
 __all__ = ["CTRModelSpec", "CTRModel", "init_dense", "mlp_init",
            "emit_embedding_ops", "emit_mlp_ops", "bce_loss"]
@@ -132,17 +133,51 @@ def emit_embedding_ops(g: OpGraph, emb: FusedEmbeddingCollection,
 
 
 def emit_mlp_ops(g: OpGraph, layers: list[dict], src: str, module: str,
-                 prefix: str = "mlp", final_act: bool = False) -> str:
-    """Per-layer GEMM (flagged) + ReLU (non-GEMM, fusable)."""
+                 prefix: str = "mlp", final_act: bool = False,
+                 compute_dtype: str = "fp32") -> str:
+    """Per-layer GEMM (flagged) + ReLU (non-GEMM, fusable).
+
+    ``compute_dtype="int8"`` swaps each fp32 GEMM + ReLU pair for ONE
+    fused quantized op (``kops.dense_matmul_q8``): the weight matrix is
+    quantized per output channel HERE, once at graph-build time — MLP
+    weights are never runtime inputs, so the baked int8 constants keep
+    refresh recompile-free by construction — while activations quantize
+    per row dynamically inside the op, and dequant + bias + ReLU run in
+    the kernel epilogue. Structural counters land in ``g.meta`` and
+    surface as the ``mlp_quant_*`` fields of ``ExecutorStats``.
+    """
+    if compute_dtype not in ("fp32", "int8"):
+        raise ValueError(f"unknown compute_dtype {compute_dtype!r}")
     cur = src
     n = len(layers)
     for li, layer in enumerate(layers):
         w, b = layer["w"], layer["b"]
+        act = li < n - 1 or final_act
+        if compute_dtype == "int8":
+            qw, wscale = quantize_channels(w)
+            out_edge = f"{prefix}_a{li}" if act else f"{prefix}_h{li}"
+            g.add(Op(f"{prefix}_q8gemm{li}",
+                     lambda h, _qw=qw, _ws=wscale, _b=b, _act=act:
+                         kops.dense_matmul_q8(h, _qw, _ws, _b, relu=_act),
+                     (cur,), out_edge, is_gemm=True, module=module))
+            cur = out_edge
+            fan_in, fan_out = int(w.shape[0]), int(w.shape[1])
+            # int8 payload + one fp32 scale per output channel, vs 4 B/elt
+            q8_bytes = fan_in * fan_out + 4 * fan_out
+            g.meta["compute_dtype"] = "int8"
+            g.meta["mlp_quant_matmuls"] = \
+                g.meta.get("mlp_quant_matmuls", 0) + 1
+            g.meta["mlp_quant_weight_bytes"] = \
+                g.meta.get("mlp_quant_weight_bytes", 0) + q8_bytes
+            g.meta["mlp_quant_weight_bytes_saved"] = \
+                g.meta.get("mlp_quant_weight_bytes_saved", 0) \
+                + 4 * fan_in * fan_out - q8_bytes
+            continue
         g.add(Op(f"{prefix}_gemm{li}",
                  lambda h, _w=w, _b=b: h @ _w + _b,
                  (cur,), f"{prefix}_h{li}", is_gemm=True, module=module))
         cur = f"{prefix}_h{li}"
-        if li < n - 1 or final_act:
+        if act:
             g.add(Op(f"{prefix}_relu{li}",
                      lambda h: jnp.maximum(h, 0),
                      (cur,), f"{prefix}_a{li}", module=module,
@@ -222,7 +257,8 @@ class CTRModel:
     def init(self, key: jax.Array) -> dict:
         raise NotImplementedError
 
-    def build_graph(self, params: dict, level: str) -> OpGraph:
+    def build_graph(self, params: dict, level: str,
+                    compute_dtype: str = "fp32") -> OpGraph:
         raise NotImplementedError
 
     # embedding-store surface --------------------------------------------------

@@ -42,7 +42,8 @@ class DCN(CTRModel):
         params["cross"] = cross
         return params
 
-    def build_graph(self, params: dict, level: str) -> OpGraph:
+    def build_graph(self, params: dict, level: str,
+                    compute_dtype: str = "fp32") -> OpGraph:
         g = OpGraph(["ids"])
         emit_embedding_ops(g, self.embedding, params, level)
 
@@ -69,7 +70,8 @@ class DCN(CTRModel):
 
         # implicit: deep MLP
         deep_out = emit_mlp_ops(g, params["mlp"], "x_embed", "implicit",
-                                prefix="deep", final_act=True)
+                                prefix="deep", final_act=True,
+                                compute_dtype=compute_dtype)
 
         # head
         hw, hb = params["head"]["w"], params["head"]["b"]

@@ -32,7 +32,8 @@ class DCNv2(CTRModel):
         }
         return params
 
-    def build_graph(self, params: dict, level: str) -> OpGraph:
+    def build_graph(self, params: dict, level: str,
+                    compute_dtype: str = "fp32") -> OpGraph:
         g = OpGraph(["ids"])
         emit_embedding_ops(g, self.embedding, params, level)
 
@@ -58,7 +59,8 @@ class DCNv2(CTRModel):
 
         # implicit: deep MLP
         deep_out = emit_mlp_ops(g, params["mlp"], "x_embed", "implicit",
-                                prefix="deep", final_act=True)
+                                prefix="deep", final_act=True,
+                                compute_dtype=compute_dtype)
 
         # head
         hw, hb = params["head"]["w"], params["head"]["b"]

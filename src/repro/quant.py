@@ -10,6 +10,11 @@ One quantization codepath for every int8 wire format in the repo:
 * **gradient compression** — ``repro.training.compression`` quantizes
   per-256-element blocks with a rank-shared scale for the data-parallel
   all-reduce.
+* **MLP weights** — plans compiled with ``compute_dtype="int8"`` hold each
+  dense-branch weight matrix as int8 with one fp32 scale per *output
+  channel* (``quantize_channels``); the fused ``dense_matmul_q8`` kernel
+  accumulates int8×int8→int32 and dequantizes in the epilogue, so the
+  fp32 weight never exists at serve time.
 
 Symmetric absmax: ``scale = max|x| / 127`` (the -128 code is unused so the
 grid is symmetric around an *exact* zero), ``q = clip(round(x / scale))``.
@@ -30,7 +35,8 @@ import numpy as np
 import jax.numpy as jnp
 
 __all__ = ["QMAX", "SCALE_EPS", "absmax_scale", "quantize", "dequantize",
-           "quantize_rows", "dequantize_rows"]
+           "quantize_rows", "dequantize_rows",
+           "quantize_channels", "dequantize_channels"]
 
 #: symmetric int8 range [-127, 127]; -128 is deliberately unused
 QMAX = 127.0
@@ -80,4 +86,26 @@ def quantize_rows(table):
 def dequantize_rows(q, scale):
     """Inverse of :func:`quantize_rows`: (rows, d) int8 × (rows, 1) f32
     -> (rows, d) float32."""
+    return dequantize(q, scale)
+
+
+def quantize_channels(w):
+    """Quantize a (fan_in, fan_out) dense weight per *output channel*.
+
+    The per-channel (``axis=0``) twin of :func:`quantize_rows`: each output
+    column gets its own absmax scale, so one outlier channel cannot crush
+    the resolution of every other channel — the standard weight layout for
+    int8 matmuls (the scale broadcasts over the int32 accumulator columns
+    in the kernel epilogue).
+
+    Returns ``(q, scale)``: ``q`` (fan_in, fan_out) int8 and ``scale``
+    (1, fan_out) float32.
+    """
+    scale = absmax_scale(w, axis=0)
+    return quantize(w, scale), scale
+
+
+def dequantize_channels(q, scale):
+    """Inverse of :func:`quantize_channels`: (fan_in, fan_out) int8 ×
+    (1, fan_out) f32 -> (fan_in, fan_out) float32."""
     return dequantize(q, scale)

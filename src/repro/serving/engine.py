@@ -65,7 +65,47 @@ from repro.embedding import StagingOverflowError
 from .batching import BatchPolicy, BucketedBatch
 
 __all__ = ["InferenceEngine", "EngineStats", "RequestFuture",
-           "QueueFullError"]
+           "QueueFullError", "AGGREGATED_COUNTERS"]
+
+#: StoreStats attribute -> the EngineStats counter mirroring it. This table
+#: *is* the wiring: ``_mirror_store_stats`` copies by name under the stats
+#: lock, so surfacing a new store counter means one entry here (plus the
+#: EngineStats field), not another hand-written copy block.
+_STORE_MIRROR = {
+    "hits": "emb_cache_hits",
+    "misses": "emb_cache_misses",
+    "refreshes": "emb_cache_refreshes",
+    "staged_rows": "emb_staged_rows",
+    "prefetched_rows": "emb_prefetched_rows",
+    "h2d_bytes": "emb_h2d_bytes",
+    "staging_overflows": "emb_staging_overflows",
+    "gather_bytes": "emb_gather_bytes",
+    "quant_rows": "emb_quant_rows",
+    "quant_bytes_saved": "emb_quant_bytes_saved",
+}
+
+#: ExecutorStats attribute -> the EngineStats counter accumulating it once
+#: per *plan compile* (weight bytes are a property of the compiled plan,
+#: not of served traffic); applied on every plan-cache miss.
+_PLAN_MIRROR = {
+    "mlp_quant_weight_bytes": "mlp_quant_weight_bytes",
+    "mlp_quant_weight_bytes_saved": "mlp_quant_weight_bytes_saved",
+}
+
+#: Every additive EngineStats counter ``ServingRuntime.stats()`` rolls up
+#: across engines — the engine's own totals plus the mirrored store/plan
+#: counters above, so a counter added to either mirror table aggregates
+#: into RuntimeStats without touching runtime.py (it still needs the
+#: matching RuntimeStats field, which the dataclass asserts at import).
+AGGREGATED_COUNTERS = (
+    "n_requests", "n_batches", "n_rejected", "queue_depth",
+    "cache_hits", "cache_misses",
+    "emb_cache_refreshes", "emb_staged_rows", "emb_prefetched_rows",
+    "emb_h2d_bytes", "emb_staging_overflows", "emb_gather_bytes",
+    "emb_quant_rows", "emb_quant_bytes_saved",
+    "mlp_quant_matmuls", "mlp_quant_weight_bytes",
+    "mlp_quant_weight_bytes_saved",
+)
 
 
 class QueueFullError(RuntimeError):
@@ -185,6 +225,12 @@ class EngineStats:
     (``emb_quant_rows`` — rows quantized at init/adopt/refresh,
     ``emb_quant_bytes_saved`` — gather bytes the int8 representation
     avoided) is nonzero only for ``row_dtype="int8"`` stores.
+
+    The ``mlp_quant_*`` trio mirrors the quantized-*compute* half
+    (``compute_dtype="int8"`` plans): ``mlp_quant_matmuls`` counts int8
+    matmul dispatches across served batches, and the weight-byte pair
+    accumulates once per compiled plan (int8 payload + per-channel scales,
+    and the bytes saved vs the fp32 matrices). All zero for fp32 engines.
     """
     n_requests: int = 0
     n_batches: int = 0
@@ -209,6 +255,9 @@ class EngineStats:
     emb_gather_bytes: int = 0
     emb_quant_rows: int = 0
     emb_quant_bytes_saved: int = 0
+    mlp_quant_matmuls: int = 0
+    mlp_quant_weight_bytes: int = 0
+    mlp_quant_weight_bytes_saved: int = 0
 
     def __post_init__(self):
         self.latency_ms = deque(self.latency_ms or (),
@@ -271,6 +320,12 @@ class InferenceEngine:
         donate: donate input buffers to the compiled steps (level "dual"
             only; the eager levels ignore it). Runtime store tensors are
             never donated.
+        compute_dtype: dense-branch compute dtype for every plan this
+            engine compiles — ``"fp32"`` (default) or ``"int8"`` (fused
+            quantized matmuls, see ``compile_plan``). Part of the plan
+            cache key, so engines at different dtypes never share plans;
+            refresh stays recompile-free either way (MLP weights quantize
+            once at compile and are not runtime inputs).
         store: optional ``repro.embedding`` store (e.g. ``CachedStore``)
             to retrofit onto the model's main embedding table; ``params``
             are converted bit-exactly into the store's layout. The engine
@@ -299,6 +354,7 @@ class InferenceEngine:
                  branch_order: str = "longer_first",
                  mesh: jax.sharding.Mesh | None = None,
                  donate: bool = False,
+                 compute_dtype: str = "fp32",
                  store=None,
                  refresh_every: int | None = None,
                  max_queue_depth: int | None = None,
@@ -320,6 +376,7 @@ class InferenceEngine:
         self.branch_order = branch_order
         self.mesh = mesh
         self.donate = donate
+        self.compute_dtype = compute_dtype
         self.refresh_every = refresh_every
         self.worker_tick_ms = worker_tick_ms
         self._plans: dict[PlanKey, InferencePlan] = {}
@@ -372,16 +429,8 @@ class InferenceEngine:
         ss = self.store.stats
         st = self.stats
         with st.lock:
-            st.emb_cache_hits = ss.hits
-            st.emb_cache_misses = ss.misses
-            st.emb_cache_refreshes = ss.refreshes
-            st.emb_staged_rows = ss.staged_rows
-            st.emb_prefetched_rows = ss.prefetched_rows
-            st.emb_h2d_bytes = ss.h2d_bytes
-            st.emb_staging_overflows = ss.staging_overflows
-            st.emb_gather_bytes = ss.gather_bytes
-            st.emb_quant_rows = ss.quant_rows
-            st.emb_quant_bytes_saved = ss.quant_bytes_saved
+            for src, dst in _STORE_MIRROR.items():
+                setattr(st, dst, getattr(ss, src))
 
     # -- staging (out-of-HBM stores) ----------------------------------------
     @property
@@ -408,6 +457,7 @@ class InferenceEngine:
         """
         store = self._staging_store
         if store is None:
+            self._bump_mlp_quant(plan)
             return plan.predict(rows)
         key = getattr(self.model, "main_embedding_key", "emb")
         try:
@@ -418,12 +468,22 @@ class InferenceEngine:
             for chunk in store.split_for_staging(rows):
                 staged = store.stage(self.params[key], chunk)
                 self.params = {**self.params, key: staged}
+                self._bump_mlp_quant(plan)
                 outs.append(plan.predict(chunk))
             self._mirror_store_stats()
             return np.concatenate(outs)
         self.params = {**self.params, key: staged}
         self._mirror_store_stats()
+        self._bump_mlp_quant(plan)
         return plan.predict(rows)
+
+    def _bump_mlp_quant(self, plan: InferencePlan) -> None:
+        """Count one execution of a quantized-compute plan: every int8
+        matmul in its graph dispatches once per plan call."""
+        n = getattr(plan.stats, "mlp_quant_matmuls", 0)
+        if n:
+            with self.stats.lock:
+                self.stats.mlp_quant_matmuls += n
 
     def _hint_upcoming(self, limit: int = 4096) -> None:
         """Hand the still-queued requests' ids (batch t+1 while batch t is
@@ -479,7 +539,8 @@ class InferenceEngine:
     # -- plan cache ----------------------------------------------------------
     def _plan_key(self, bucket: int) -> PlanKey:
         return plan_key_for(self.model, self.level, bucket,
-                            self.branch_order, sharded=self.mesh is not None)
+                            self.branch_order, sharded=self.mesh is not None,
+                            compute_dtype=self.compute_dtype)
 
     def plan_for(self, bucket: int) -> InferencePlan:
         """Fetch (or compile-and-cache) the plan for one batch bucket."""
@@ -493,12 +554,17 @@ class InferenceEngine:
             plan = compile_plan(self.model, self.params, self.level, bucket,
                                 mesh=self.mesh, donate=self.donate,
                                 branch_order=self.branch_order,
-                                runtime_provider=self._runtime_env)
+                                runtime_provider=self._runtime_env,
+                                compute_dtype=self.compute_dtype)
             self._plans[key] = plan
             with self.stats.lock:
                 self.stats.cache_misses += 1
                 self.stats.compile_ms_per_bucket[int(bucket)] = \
                     plan.compile_ms
+                for src, dst in _PLAN_MIRROR.items():
+                    setattr(self.stats, dst,
+                            getattr(self.stats, dst)
+                            + getattr(plan.stats, src, 0))
         return plan
 
     @property
@@ -709,4 +775,4 @@ class InferenceEngine:
                 return self._predict_staged(self.plan_for(bucket), ids)
         with self._drain_lock:    # observe never races a refresh/drain
             self._observe_traffic(ids)
-        return self.plan_for(bucket).predict(ids)
+        return self._predict_staged(self.plan_for(bucket), ids)

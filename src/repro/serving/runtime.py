@@ -40,7 +40,8 @@ from typing import Sequence
 
 import numpy as np
 
-from .engine import EngineStats, InferenceEngine, RequestFuture
+from .engine import (AGGREGATED_COUNTERS, EngineStats, InferenceEngine,
+                     RequestFuture)
 
 __all__ = ["ServingRuntime", "RuntimeStats"]
 
@@ -52,7 +53,10 @@ class RuntimeStats:
     ``p50_ms``/``p99_ms`` are computed over the *union* of the engines'
     rolling latency windows (recent samples, same caveat as
     ``EngineStats``). ``per_model`` holds the live per-engine stats
-    objects for drill-down.
+    objects for drill-down. Every counter named in
+    ``engine.AGGREGATED_COUNTERS`` is a field here — :meth:`stats` sums
+    them generically, and the import-time check below keeps the two
+    definitions from drifting.
     """
     n_models: int
     n_requests: int
@@ -71,7 +75,17 @@ class RuntimeStats:
     emb_gather_bytes: int
     emb_quant_rows: int
     emb_quant_bytes_saved: int
+    mlp_quant_matmuls: int
+    mlp_quant_weight_bytes: int
+    mlp_quant_weight_bytes_saved: int
     per_model: dict[str, EngineStats]
+
+
+_missing = [name for name in AGGREGATED_COUNTERS
+            if name not in RuntimeStats.__dataclass_fields__]
+assert not _missing, (
+    f"RuntimeStats lacks fields for AGGREGATED_COUNTERS: {_missing}")
+del _missing
 
 
 class ServingRuntime:
@@ -218,29 +232,13 @@ class ServingRuntime:
     def stats(self) -> RuntimeStats:
         """Aggregate snapshot across engines (see :class:`RuntimeStats`)."""
         lat: list[float] = []
-        tot = dict(n_requests=0, n_batches=0, n_rejected=0, queue_depth=0,
-                   cache_hits=0, cache_misses=0, emb_cache_refreshes=0,
-                   emb_staged_rows=0, emb_prefetched_rows=0, emb_h2d_bytes=0,
-                   emb_staging_overflows=0, emb_gather_bytes=0,
-                   emb_quant_rows=0, emb_quant_bytes_saved=0)
+        tot = {name: 0 for name in AGGREGATED_COUNTERS}
         for eng in self._engines.values():
             st = eng.stats
             with st.lock:
                 lat.extend(st.latency_ms)
-                tot["n_requests"] += st.n_requests
-                tot["n_batches"] += st.n_batches
-                tot["n_rejected"] += st.n_rejected
-                tot["queue_depth"] += st.queue_depth
-                tot["cache_hits"] += st.cache_hits
-                tot["cache_misses"] += st.cache_misses
-                tot["emb_cache_refreshes"] += st.emb_cache_refreshes
-                tot["emb_staged_rows"] += st.emb_staged_rows
-                tot["emb_prefetched_rows"] += st.emb_prefetched_rows
-                tot["emb_h2d_bytes"] += st.emb_h2d_bytes
-                tot["emb_staging_overflows"] += st.emb_staging_overflows
-                tot["emb_gather_bytes"] += st.emb_gather_bytes
-                tot["emb_quant_rows"] += st.emb_quant_rows
-                tot["emb_quant_bytes_saved"] += st.emb_quant_bytes_saved
+                for name in AGGREGATED_COUNTERS:
+                    tot[name] += getattr(st, name)
         return RuntimeStats(
             n_models=len(self._engines),
             p50_ms=float(np.percentile(lat, 50)) if lat else 0.0,

@@ -91,3 +91,37 @@ def test_moe_active_params():
     st = param_stats("phi3.5-moe-42b-a6.6b")
     assert st["active"] < st["total"] / 2     # top-2 of 16 experts
     assert 35e9 < st["total"] < 50e9
+
+
+def test_analyze_cell_int8_companion_terms():
+    """The int8 twin of each roofline cell: matmuls at the doubled MXU
+    peak, the weights-read HBM component at ~1/4 bytes, both arithmetic
+    intensities populated (int8 strictly higher — same FLOPs over fewer
+    bytes)."""
+    import dataclasses
+
+    from repro.analysis import hw
+    from repro.analysis.analytic import analytic_cost
+    from repro.analysis.roofline import analyze_cell
+
+    n = 64
+    c = jax.jit(lambda a, b: a @ b).lower(
+        jax.ShapeDtypeStruct((n, n), jnp.float32),
+        jax.ShapeDtypeStruct((n, n), jnp.float32)).compile()
+    rep = analyze_cell("llama3-8b", "train_4k", "pod", 512, c)
+
+    np.testing.assert_allclose(rep.compute_s_int8, rep.compute_s / 2.0,
+                               rtol=1e-12)
+    an = analytic_cost("llama3-8b", "train_4k", 512, rep.n_micro)
+    w_read = an.components["weights_read"]
+    assert w_read > 0
+    np.testing.assert_allclose(
+        rep.memory_s_int8,
+        (an.hbm_bytes_per_device - 0.75 * w_read) / hw.HBM_BW, rtol=1e-12)
+    assert rep.memory_s_int8 < rep.memory_s
+    assert rep.arith_intensity_int8 > rep.arith_intensity > 0.0
+    # the dry-run record schema: new fields serialize with the rest
+    d = dataclasses.asdict(rep)
+    for k in ("compute_s_int8", "memory_s_int8", "arith_intensity",
+              "arith_intensity_int8"):
+        assert k in d

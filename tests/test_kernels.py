@@ -502,3 +502,72 @@ def test_three_level_q8_multihot_matches_jnp_twin(h):
         jnp.asarray(smap), offsets, strategy="pallas", interpret=True)
     np.testing.assert_allclose(np.asarray(got_pl), np.asarray(got_jnp),
                                rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# quantized dense matmul (int8 x int8 -> int32, fused dequant epilogue)
+# ---------------------------------------------------------------------------
+
+
+def _q8_mlp_layer(rng, b, fan_in, fan_out):
+    h = jnp.asarray(rng.normal(size=(b, fan_in)), dtype=jnp.float32)
+    w = jnp.asarray(rng.normal(size=(fan_in, fan_out)), dtype=jnp.float32)
+    bias = jnp.asarray(rng.normal(size=(fan_out,)), dtype=jnp.float32)
+    wq, wscale = quant.quantize_channels(w)
+    return h, w, bias, wq, wscale
+
+
+@pytest.mark.parametrize("relu", [True, False])
+@pytest.mark.parametrize("b,fan_in,fan_out", [
+    (1, 1, 1), (4, 16, 8), (32, 80, 96), (33, 7, 5),   # odd, non-multiple
+])
+def test_dense_matmul_q8_kernel_matches_ref(relu, b, fan_in, fan_out):
+    """The Pallas kernel (interpret mode) is bitwise equal to the jitted
+    jnp twin — same int32 accumulate, same epilogue multiply order."""
+    rng = np.random.default_rng(b * 101 + fan_in)
+    h, _, bias, wq, wscale = _q8_mlp_layer(rng, b, fan_in, fan_out)
+    want = ops.dense_matmul_q8(h, wq, wscale, bias, relu=relu,
+                               strategy="jnp")
+    got = ops.dense_matmul_q8(h, wq, wscale, bias, relu=relu,
+                              strategy="pallas", interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("relu", [True, False])
+def test_dense_matmul_q8_error_bound_vs_fp32(relu):
+    """Quantized output stays within the propagated grid-step budget of
+    the fp32 matmul: each product term errs by at most
+    (|h|·ws/2 + |w|·hs/2 + hs·ws/4) so the row-sum bound is linear in
+    fan_in; ReLU never widens it (1-Lipschitz)."""
+    rng = np.random.default_rng(7)
+    b, fan_in, fan_out = 16, 64, 32
+    h, w, bias, wq, wscale = _q8_mlp_layer(rng, b, fan_in, fan_out)
+    hscale = quant.absmax_scale(h, axis=-1)
+
+    exact = np.asarray(h) @ np.asarray(w) + np.asarray(bias)[None, :]
+    if relu:
+        exact = np.maximum(exact, 0.0)
+    got = np.asarray(ops.dense_matmul_q8(h, wq, wscale, bias, relu=relu,
+                                         strategy="jnp"))
+
+    hs, ws = np.asarray(hscale), np.asarray(wscale)
+    habs, wabs = np.abs(np.asarray(h)), np.abs(np.asarray(w))
+    bound = (habs @ (np.ones_like(wabs) * ws) * 0.5
+             + (np.ones_like(habs) * hs) @ wabs * 0.5
+             + fan_in * hs * ws * 0.25) + 1e-5
+    assert np.all(np.abs(got - exact) <= bound)
+
+
+def test_dense_matmul_q8_batch_grid_tiling():
+    """Batches that straddle the block_b grid tile bitwise-match the
+    single-tile result (same rows, different grid decomposition)."""
+    rng = np.random.default_rng(3)
+    h, _, bias, wq, wscale = _q8_mlp_layer(rng, 24, 16, 8)
+    one = ops.dense_matmul_q8(h, wq, wscale, bias, strategy="pallas",
+                              interpret=True)
+    from repro.kernels.dense_matmul import dmm_q8
+    hscale = quant.absmax_scale(h, axis=-1)
+    hq = quant.quantize(h, hscale)
+    tiled = dmm_q8(hq, hscale, wq, wscale, bias.reshape(1, -1),
+                   block_b=8, interpret=True)
+    np.testing.assert_array_equal(np.asarray(one), np.asarray(tiled))

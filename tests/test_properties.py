@@ -154,3 +154,41 @@ def test_flash_equals_direct_attention(data):
                               q_chunk=chunk, k_chunk=chunk)
     np.testing.assert_allclose(np.asarray(direct), np.asarray(flash),
                                rtol=2e-5, atol=2e-5)
+
+
+# --- P6 -----------------------------------------------------------------
+
+from repro import quant  # noqa: E402
+
+
+@settings(**SETTINGS)
+@given(st.data())
+def test_per_channel_quant_round_trip(data):
+    """Per-output-channel absmax quantization (the compute_dtype="int8"
+    weight format): round-trip error is bounded by half the grid step of
+    each column, -128 is never emitted (symmetric grid), and all-zero
+    columns hit the SCALE_EPS floor so they round-trip to exact zero."""
+    fan_in = data.draw(st.integers(1, 48), label="fan_in")
+    fan_out = data.draw(st.integers(1, 48), label="fan_out")
+    seed = data.draw(st.integers(0, 1000), label="seed")
+    rng = np.random.default_rng(seed)
+    w = rng.normal(scale=data.draw(st.sampled_from([1e-3, 1.0, 50.0])),
+                   size=(fan_in, fan_out)).astype(np.float32)
+    if fan_out > 1 and data.draw(st.booleans(), label="zero_col"):
+        w[:, rng.integers(0, fan_out)] = 0.0
+
+    q, scale = quant.quantize_channels(jnp.asarray(w))
+    q, scale = np.asarray(q), np.asarray(scale)
+    assert q.dtype == np.int8 and q.shape == w.shape
+    assert scale.shape == (1, fan_out)
+    assert q.min(initial=0) >= -127                    # -128 never emitted
+
+    back = np.asarray(quant.dequantize_channels(jnp.asarray(q),
+                                                jnp.asarray(scale)))
+    assert np.all(np.abs(back - w) <= scale * 0.5 + 1e-7)
+
+    zero_cols = np.all(w == 0.0, axis=0)
+    if zero_cols.any():
+        assert np.all(scale[0, zero_cols] == np.float32(quant.SCALE_EPS))
+        assert np.all(q[:, zero_cols] == 0)
+        assert np.all(back[:, zero_cols] == 0.0)
