@@ -1,7 +1,8 @@
-"""Async serving runtime benchmark — sync drain vs futures intake, and
-plan-cache survival across embedding-cache refreshes.
+"""Async serving runtime benchmark — sync drain vs futures intake,
+plan-cache survival across embedding-cache refreshes, and the many-model
+shared-scheduler sweep.
 
-Three measurements on the same zipf request stream:
+Measurements on the same zipf request stream:
 
   1. **sync**: the caller submits a wave then drains it (`serve_pending`)
      — the pre-runtime serving loop, intake blocked on compute.
@@ -13,14 +14,25 @@ Three measurements on the same zipf request stream:
      runtime inputs of every compiled plan, the plan cache must survive
      each refresh with zero new compiles (`survived=True` in the derived
      column — the HugeCTR online-refresh property).
+  4. **many-model sweep** (models × offered load): the same round-robin
+     traffic served twice — through one shared ``DeviceScheduler`` pool
+     and through per-engine worker threads. Reports p99, thread-count
+     delta, and per-model device-time share; hard-asserts the shared
+     mode's thread budget (≤ pool_size + 1 new threads however many
+     models are hosted) and score bit-exactness across modes.
 
 Throughput deltas on CPU are modest (compute dominates); the structural
 counters (batches formed without caller polling, compiles across
-refreshes) are the point.
+refreshes, thread budgets, cross-mode exactness) are the point — each
+sweep cell's ``structural`` sub-dict holds only traffic-deterministic
+values and is pinned by ``BENCH_serving.json`` via
+``benchmarks/diff_baseline.py`` (timing fields live in ``timing`` and are
+ignored).
 """
 
 from __future__ import annotations
 
+import threading
 import time
 
 import numpy as np
@@ -68,6 +80,96 @@ def _async(eng, ids):
     dt = time.perf_counter() - t0
     eng.stop()
     return dt
+
+
+def _sweep_cell(n_models: int, n_requests: int, ladder, max_field: int,
+                pool_size: int = 2) -> dict:
+    """One (models × offered load) cell: shared scheduler vs per-engine
+    workers on identical traffic. Small dims (embed 8, hidden 64) keep
+    the N-model compile cost bounded; the serving-loop behaviour under
+    test doesn't depend on model width."""
+    schema = CRITEO.scaled(max_field)
+    ids = _stream(schema, n_requests, seed=1)
+
+    def build_rt(mode):
+        rt = ServingRuntime(scheduler=mode, pool_size=pool_size)
+        for i in range(n_models):
+            spec = ctr_spec("widedeep", "criteo", 8, 64,
+                            max_field=max_field)
+            model = CTR_MODELS["widedeep"](spec)
+            rt.add_model(f"m{i}", model,
+                         model.init(jax.random.PRNGKey(i)),
+                         policy=TimeoutBatch(BucketedBatch(ladder),
+                                             max_wait_ms=2.0),
+                         worker_tick_ms=1.0)
+        rt.warmup()
+        return rt
+
+    def drive(rt):
+        t0 = time.perf_counter()
+        futs = [rt.submit(rt.models[i % n_models], row)
+                for i, row in enumerate(ids)]
+        scores = np.array([f.result(timeout=600.0) for f in futs])
+        return scores, time.perf_counter() - t0
+
+    rt_s = build_rt("shared")
+    before = threading.active_count()
+    rt_s.start()
+    scores_s, dt_s = drive(rt_s)
+    delta_s = threading.active_count() - before
+    rt_s.stop()
+    agg_s = rt_s.stats()
+    share_sum = sum(rt_s.scheduler.shares.values())
+    shares = {n: round(s, 3) for n, s in sorted(
+        rt_s.scheduler.shares.items())}
+
+    rt_p = build_rt("per-engine")
+    before = threading.active_count()
+    rt_p.start()
+    scores_p, dt_p = drive(rt_p)
+    delta_p = threading.active_count() - before
+    rt_p.stop()
+    agg_p = rt_p.stats()
+
+    # the acceptance property, asserted where the sweep runs (CI dry
+    # included): thread count must not scale with model count
+    assert delta_s <= pool_size + 1, (
+        f"shared scheduler spawned {delta_s} threads for {n_models} "
+        f"models; budget is pool_size + 1 = {pool_size + 1}")
+    bitexact = bool(np.array_equal(scores_s, scores_p))
+    tag = f"sweep_m{n_models}_r{n_requests}"
+    emit(f"serving_async/{tag}/shared", dt_s / n_requests * 1e6,
+         f"req_s={n_requests/dt_s:.0f} p99_ms={agg_s.p99_ms:.1f} "
+         f"threads=+{delta_s} dispatches={agg_s.sched_dispatches} "
+         f"bitexact={bitexact}")
+    emit(f"serving_async/{tag}/per_engine", dt_p / n_requests * 1e6,
+         f"req_s={n_requests/dt_p:.0f} p99_ms={agg_p.p99_ms:.1f} "
+         f"threads=+{delta_p}")
+    return {
+        "structural": {
+            # deterministic for fixed traffic: pinned by BENCH_serving.json
+            "n_models": n_models,
+            "n_requests_per_mode": int(agg_s.n_requests),
+            "pool_size": pool_size,
+            "thread_budget_ok": True,        # the assert above enforces it
+            "bitexact_vs_per_engine": bitexact,
+            "share_sum_ok": bool(abs(share_sum - 1.0) < 1e-6),
+            "compiles_total": int(agg_s.cache_misses),
+            "worker_errors": int(agg_s.n_worker_errors
+                                 + agg_p.n_worker_errors),
+        },
+        "timing": {
+            "p99_ms_shared": agg_s.p99_ms,
+            "p99_ms_per_engine": agg_p.p99_ms,
+            "req_s_shared": n_requests / dt_s,
+            "req_s_per_engine": n_requests / dt_p,
+            "threads_shared": delta_s,
+            "threads_per_engine": delta_p,
+            "sched_dispatches": int(agg_s.sched_dispatches),
+            "preempted_slack_ms": agg_s.sched_preempted_slack_ms,
+            "device_time_share": shares,
+        },
+    }
 
 
 def run(quick: bool = False, dry: bool = False) -> dict:
@@ -146,6 +248,15 @@ def run(quick: bool = False, dry: bool = False) -> dict:
              f"req_s={n/dt:.0f} p99_ms={agg.p99_ms:.1f} "
              f"models={agg.n_models} batches={agg.n_batches}")
         results["runtime/req_s"] = n / dt
+
+    # --- many-model sweep: shared scheduler vs per-engine workers ----------
+    # cell names are part of the pinned baseline: the CI dry run must
+    # produce exactly the dry list below (diff_baseline compares cell sets)
+    cells = ([(2, 64), (6, 96)] if dry else
+             ([(4, 256)] if quick else [(8, 2000), (8, 8000)]))
+    for n_models, n_requests in cells:
+        results[f"sweep_m{n_models}_r{n_requests}"] = _sweep_cell(
+            n_models, n_requests, ladder, max_field)
     return results
 
 

@@ -114,7 +114,8 @@ def serve_ctr(args) -> None:
         print(f"[serve] mesh {dict(mesh.shape)} over "
               f"{mesh.devices.size} devices")
     rt = ServingRuntime(refresh_every=args.runtime_refresh_every,
-                        mesh=mesh)
+                        mesh=mesh, scheduler=args.sched,
+                        pool_size=args.pool_size)
     for name in names:
         spec = ctr_spec(name, "criteo", 16, 256, max_field=100_000)
         model = CTR_MODELS[name](spec)
@@ -144,7 +145,8 @@ def serve_ctr(args) -> None:
 
     if args.use_async:
         # futures-based intake: round-robin the stream over the hosted
-        # models, let each engine's worker drain its own queue
+        # models; --sched shared (default) drains every queue through one
+        # DeviceScheduler pool, --sched per-engine gives each its worker
         rt.start()
         futs = {n: [] for n in names}
         for i, row in enumerate(ids):
@@ -172,6 +174,14 @@ def serve_ctr(args) -> None:
               f"{agg.n_requests} requests in {agg.n_batches} batches  "
               f"p50={agg.p50_ms:.1f}ms p99={agg.p99_ms:.1f}ms  "
               f"refreshes={agg.emb_cache_refreshes}")
+    sched = rt.scheduler
+    if args.use_async and sched is not None:
+        shares = " ".join(f"{n}={s:.1%}" for n, s in sorted(
+            sched.shares.items()))
+        slack = rt.stats().sched_preempted_slack_ms
+        print(f"[serve:sched] pool={sched.pool_size} "
+              f"dispatches={sched.n_dispatches} "
+              f"preempted_slack={slack:.1f}ms  device_time {shares}")
 
 
 def serve_lm(args) -> None:
@@ -197,6 +207,14 @@ def main() -> None:
     ap.add_argument("--async", dest="use_async", action="store_true",
                     help="futures-based intake drained by background "
                          "workers instead of caller-driven serve_pending")
+    ap.add_argument("--sched", default="shared",
+                    choices=["shared", "per-engine"],
+                    help="async drain mode: 'shared' (default) runs one "
+                         "DeviceScheduler pool over every hosted engine "
+                         "(constant thread count, least-SLO-slack-first); "
+                         "'per-engine' keeps one worker thread per engine")
+    ap.add_argument("--pool-size", type=int, default=2,
+                    help="worker threads in the shared scheduler pool")
     ap.add_argument("--arch", default="llama3-8b", choices=list(ARCH_NAMES))
     ap.add_argument("--batch", type=int, default=64)
     ap.add_argument("--level", default="dual",

@@ -3,24 +3,29 @@ generation.
 
 CTR flow:  ``compile_plan`` (repro.core.plan) → ``InferencePlan`` →
 ``InferenceEngine`` (plan cache + pluggable batching policy + futures-based
-async intake) → ``ServingRuntime`` (multi-model router, one worker per
-engine, shared admission cadence).
+async intake) → ``ServingRuntime`` (multi-model router, shared admission
+cadence) draining through a ``DeviceScheduler`` (one shared worker pool
+serving every hosted engine least-SLO-slack-first; per-engine worker
+threads remain as a compat mode).
 """
 
 from .batching import (BatchDecision, BatchPolicy, BucketedBatch, FixedBatch,
                        TimeoutBatch)
 from .engine import (EngineStats, InferenceEngine, QueueFullError,
-                     RequestFuture)
+                     ReadyBatch, RequestFuture)
 from .runtime import RuntimeStats, ServingRuntime
+from .scheduler import DeviceScheduler
 from .generate import generate
 
 __all__ = [
     "InferenceEngine",
     "EngineStats",
     "RequestFuture",
+    "ReadyBatch",
     "QueueFullError",
     "ServingRuntime",
     "RuntimeStats",
+    "DeviceScheduler",
     "BatchPolicy",
     "BatchDecision",
     "FixedBatch",

@@ -45,6 +45,16 @@ class BatchPolicy:
         set; engines warm these)."""
         raise NotImplementedError
 
+    @property
+    def partial_hold_ms(self) -> float | None:
+        """How long a partial batch may wait for more arrivals before it
+        becomes *due* — the deadline behind the engine's ``next_ready``
+        readiness view (SLO slack = hold − oldest wait). ``None`` means
+        the policy has no deadline of its own and the engine's default
+        grace (a few worker ticks) applies; ``TimeoutBatch`` overrides
+        this with its explicit ``max_wait_ms`` SLO."""
+        return None
+
     def decide(self, pending: int, oldest_wait_ms: float, *,
                allow_partial: bool) -> BatchDecision | None:
         raise NotImplementedError
@@ -115,6 +125,10 @@ class TimeoutBatch(BatchPolicy):
     @property
     def buckets(self) -> tuple[int, ...]:
         return self.inner.buckets
+
+    @property
+    def partial_hold_ms(self) -> float | None:
+        return self.max_wait_ms
 
     def decide(self, pending: int, oldest_wait_ms: float, *,
                allow_partial: bool) -> BatchDecision | None:

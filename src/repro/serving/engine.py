@@ -64,7 +64,7 @@ from repro.core.plan import (InferencePlan, PlanKey, compile_plan,
 from repro.embedding import StagingOverflowError
 from .batching import BatchPolicy, BucketedBatch
 
-__all__ = ["InferenceEngine", "EngineStats", "RequestFuture",
+__all__ = ["InferenceEngine", "EngineStats", "RequestFuture", "ReadyBatch",
            "QueueFullError", "AGGREGATED_COUNTERS"]
 
 #: StoreStats attribute -> the EngineStats counter mirroring it. This table
@@ -99,13 +99,34 @@ _PLAN_MIRROR = {
 #: matching RuntimeStats field, which the dataclass asserts at import).
 AGGREGATED_COUNTERS = (
     "n_requests", "n_batches", "n_rejected", "queue_depth",
+    "n_worker_errors",
     "cache_hits", "cache_misses",
     "emb_cache_refreshes", "emb_staged_rows", "emb_prefetched_rows",
     "emb_h2d_bytes", "emb_staging_overflows", "emb_gather_bytes",
     "emb_quant_rows", "emb_quant_bytes_saved",
     "mlp_quant_matmuls", "mlp_quant_weight_bytes",
     "mlp_quant_weight_bytes_saved",
+    "sched_dispatches", "sched_preempted_slack_ms", "device_time_share",
 )
+
+
+@dataclasses.dataclass(frozen=True)
+class ReadyBatch:
+    """One engine's dispatch candidate, as seen by a device scheduler.
+
+    ``slack_ms <= 0`` means the batch is due *now* (a full bucket, or a
+    partial batch whose hold deadline has passed — ``-slack_ms`` is then
+    how far past it already is); ``slack_ms > 0`` means a partial batch
+    that becomes due in ``slack_ms`` (the scheduler's wake-up hint).
+    ``partial`` tells the dispatcher whether serving it needs
+    ``allow_partial`` — at dispatch time the engine re-decides against
+    the *current* queue, so requests that arrived meanwhile coalesce into
+    (possibly a larger bucket of) the same dispatch.
+    """
+    take: int
+    bucket: int
+    slack_ms: float
+    partial: bool
 
 
 class QueueFullError(RuntimeError):
@@ -231,11 +252,30 @@ class EngineStats:
     matmul dispatches across served batches, and the weight-byte pair
     accumulates once per compiled plan (int8 payload + per-channel scales,
     and the bytes saved vs the fp32 matrices). All zero for fp32 engines.
+
+    ``n_worker_errors`` counts exceptions a background drain (the
+    engine's own worker or a shared-pool dispatch) swallowed after
+    failing that batch's futures; the last one is kept in
+    ``engine.worker_error`` and re-raised by ``stop()``.
+
+    The ``sched_*`` trio is live only when a :class:`~repro.serving.
+    DeviceScheduler` serves this engine: ``sched_dispatches`` counts
+    batches the shared pool dispatched here, ``sched_preempted_slack_ms``
+    accumulates how many milliseconds past their SLO deadline this
+    engine's due partial batches sat while the device worked other models
+    (contention-burned slack — 0 means every deadline was picked up on
+    time), and ``device_time_share`` is this engine's fraction of all
+    device time the scheduler has dispatched (shares over one scheduler's
+    engines sum to 1).
     """
     n_requests: int = 0
     n_batches: int = 0
     n_rejected: int = 0
     queue_depth: int = 0
+    n_worker_errors: int = 0
+    sched_dispatches: int = 0
+    sched_preempted_slack_ms: float = 0.0
+    device_time_share: float = 0.0
     compute_ms_total: float = 0.0
     latency_window: int = 8192
     latency_ms: deque = None
@@ -263,6 +303,22 @@ class EngineStats:
         self.latency_ms = deque(self.latency_ms or (),
                                 maxlen=self.latency_window)
         self.lock = threading.RLock()
+
+    def snapshot(self) -> "EngineStats":
+        """Consistent point-in-time copy, taken under the lock: containers
+        are copied, the new object has its own lock, and later engine
+        activity never mutates it (what ``RuntimeStats.per_model`` hands
+        out, so drill-down counters don't change under the reader)."""
+        with self.lock:
+            kw = {}
+            for f in dataclasses.fields(self):
+                v = getattr(self, f.name)
+                if isinstance(v, deque):
+                    v = tuple(v)
+                elif isinstance(v, dict):
+                    v = dict(v)
+                kw[f.name] = v
+        return EngineStats(**kw)
 
     @property
     def p50_ms(self) -> float:
@@ -390,6 +446,7 @@ class InferenceEngine:
         self._compile_lock = threading.Lock()
         self._worker: threading.Thread | None = None
         self._running = False
+        self._scheduler = None        # set by DeviceScheduler.attach
         self.worker_error: BaseException | None = None
         self.stats = EngineStats(latency_window=latency_window)
         staging = self._staging_store
@@ -598,6 +655,12 @@ class InferenceEngine:
             with self.stats.lock:
                 self.stats.queue_depth = len(self._queue)
             self._cv.notify()
+        # outside _cv: the scheduler's pick loop holds its own lock while
+        # polling next_ready (which takes _cv) — notifying it from inside
+        # _cv would invert that order and deadlock
+        sched = self._scheduler
+        if sched is not None:
+            sched.notify()
         return fut
 
     def submit_many(self, rows: Sequence[np.ndarray]) -> list[RequestFuture]:
@@ -606,6 +669,47 @@ class InferenceEngine:
     def pending(self) -> int:
         with self._cv:
             return len(self._queue)
+
+    # -- scheduler readiness view ---------------------------------------------
+    def next_ready(self, now: float | None = None) -> ReadyBatch | None:
+        """What this engine would dispatch next, and how urgent it is —
+        the readiness view a :class:`~repro.serving.DeviceScheduler`
+        polls instead of giving the engine its own worker thread.
+
+        Nothing is dequeued. A full bucket is due immediately
+        (``slack_ms == 0``); a partial batch carries the SLO slack left
+        before its hold deadline — ``policy.partial_hold_ms``
+        (``TimeoutBatch.max_wait_ms``) or, for policies without their own
+        deadline (``FixedBatch``/``BucketedBatch``), the same few-tick
+        grace the per-engine worker loop applies (``8·worker_tick_ms``).
+        Returns None when the queue is empty or the policy would decline
+        even a forced partial.
+        """
+        now = time.perf_counter() if now is None else now
+        with self._cv:
+            pending = len(self._queue)
+            if not pending:
+                return None
+            oldest_wait_ms = (now - self._queue[0][0]) * 1e3
+        d = self.policy.decide(pending, oldest_wait_ms, allow_partial=False)
+        if d is not None:
+            return ReadyBatch(d.take, d.bucket, 0.0, False)
+        hold = self.policy.partial_hold_ms
+        if hold is None:
+            hold = 8 * self.worker_tick_ms
+        # would the policy emit this partial if its deadline had passed?
+        d = self.policy.decide(pending, math.inf, allow_partial=True)
+        if d is None:
+            return None
+        return ReadyBatch(d.take, d.bucket, hold - oldest_wait_ms, True)
+
+    def _note_worker_error(self, exc: BaseException) -> None:
+        """Record a drain error swallowed off the caller's thread (the
+        batch's futures already failed): counted in ``n_worker_errors``,
+        last one kept for ``stop()`` to re-raise."""
+        self.worker_error = exc
+        with self.stats.lock:
+            self.stats.n_worker_errors += 1
 
     # -- background worker ----------------------------------------------------
     def start(self) -> "InferenceEngine":
@@ -625,7 +729,10 @@ class InferenceEngine:
     def stop(self, flush: bool = True) -> None:
         """Stop the worker (joins the thread). With ``flush`` (default),
         force-drain whatever is still queued so no future is left
-        unresolved. Idempotent."""
+        unresolved. Re-raises the last error a background drain swallowed
+        (the failing batch's futures were already failed at the time;
+        ``stats.n_worker_errors`` counts every one) — cleared on raise,
+        so the call stays idempotent."""
         with self._cv:
             self._running = False
             self._cv.notify_all()
@@ -634,6 +741,9 @@ class InferenceEngine:
             worker.join()
         if flush:
             self.flush()
+        err, self.worker_error = self.worker_error, None
+        if err is not None:
+            raise err
 
     @property
     def running(self) -> bool:
@@ -675,7 +785,7 @@ class InferenceEngine:
                 if not grown or aged:
                     self._serve(allow_partial=True, force=False)
             except Exception as exc:                 # keep the loop alive;
-                self.worker_error = exc              # futures already failed
+                self._note_worker_error(exc)         # futures already failed
 
     # -- serving ---------------------------------------------------------------
     def serve_pending(self, allow_partial: bool = True) -> np.ndarray:
@@ -697,59 +807,74 @@ class InferenceEngine:
         out: list[np.ndarray] = []
         with self._drain_lock:
             while True:
-                with self._cv:
-                    if not self._queue:
-                        break
-                    oldest_wait_ms = (
-                        math.inf if force else
-                        (time.perf_counter() - self._queue[0][0]) * 1e3)
-                    decision = self.policy.decide(
-                        len(self._queue), oldest_wait_ms,
-                        allow_partial=allow_partial)
-                    if decision is None:
-                        break
-                    items = [self._queue.popleft()
-                             for _ in range(decision.take)]
-                    with self.stats.lock:
-                        self.stats.queue_depth = len(self._queue)
-                t_submit = [it[0] for it in items]
-                try:
-                    # inside the try: a malformed row (ragged shape) must
-                    # fail its batch's futures, not strand them unresolved
-                    rows = np.stack([it[1] for it in items])
-                    self._observe_traffic(rows)
-                    plan = self.plan_for(decision.bucket)
-                    # batch t+1's ids go to the async prefetch worker now,
-                    # so its host-side miss gather overlaps batch t's
-                    # stage+compute below (no-op for non-staging stores)
-                    self._hint_upcoming()
-                    t0 = time.perf_counter()
-                    # plan.predict pads to the bucket shape and slices the
-                    # padding back off — one output transform shared with
-                    # the one-shot path; _predict_staged resolves staging
-                    # stores' misses first (pass-through otherwise)
-                    scores = self._predict_staged(plan, rows)
-                    t1 = time.perf_counter()
-                except Exception as exc:
-                    for _, _, fut in items:
-                        fut._fail(exc)
-                    raise
+                scores = self._serve_step(allow_partial=allow_partial,
+                                          force=force)
+                if scores is None:
+                    break
                 out.append(scores)
-                lat = [(t1 - ts) * 1e3 for ts in t_submit]
-                st = self.stats
-                with st.lock:
-                    st.n_requests += decision.take
-                    st.n_batches += 1
-                    st.batches_per_bucket[decision.bucket] = (
-                        st.batches_per_bucket.get(decision.bucket, 0) + 1)
-                    st.padded_rows_total += decision.bucket - decision.take
-                    st.compute_ms_total += (t1 - t0) * 1e3
-                    st.latency_ms.extend(lat)
-                # futures resolve in submit order (items popped FIFO)
-                for (_, _, fut), score, l in zip(items, scores, lat):
-                    fut._resolve(float(score), l)
-                self._maybe_auto_refresh()
         return np.concatenate(out) if out else np.empty((0,))
+
+    def _serve_step(self, *, allow_partial: bool, force: bool
+                    ) -> np.ndarray | None:
+        """Serve at most *one* policy decision (one device batch); None
+        when the policy declines. The unit a shared-pool scheduler
+        dispatches — one batch per pick, so other engines' due batches
+        interleave between ours — and the loop body of ``_serve``. The
+        decision runs against the queue as it is *now*, so requests that
+        arrived since a scheduler's readiness poll coalesce in."""
+        with self._drain_lock:
+            with self._cv:
+                if not self._queue:
+                    return None
+                oldest_wait_ms = (
+                    math.inf if force else
+                    (time.perf_counter() - self._queue[0][0]) * 1e3)
+                decision = self.policy.decide(
+                    len(self._queue), oldest_wait_ms,
+                    allow_partial=allow_partial)
+                if decision is None:
+                    return None
+                items = [self._queue.popleft()
+                         for _ in range(decision.take)]
+                with self.stats.lock:
+                    self.stats.queue_depth = len(self._queue)
+            t_submit = [it[0] for it in items]
+            try:
+                # inside the try: a malformed row (ragged shape) must
+                # fail its batch's futures, not strand them unresolved
+                rows = np.stack([it[1] for it in items])
+                self._observe_traffic(rows)
+                plan = self.plan_for(decision.bucket)
+                # batch t+1's ids go to the async prefetch worker now,
+                # so its host-side miss gather overlaps batch t's
+                # stage+compute below (no-op for non-staging stores)
+                self._hint_upcoming()
+                t0 = time.perf_counter()
+                # plan.predict pads to the bucket shape and slices the
+                # padding back off — one output transform shared with
+                # the one-shot path; _predict_staged resolves staging
+                # stores' misses first (pass-through otherwise)
+                scores = self._predict_staged(plan, rows)
+                t1 = time.perf_counter()
+            except Exception as exc:
+                for _, _, fut in items:
+                    fut._fail(exc)
+                raise
+            lat = [(t1 - ts) * 1e3 for ts in t_submit]
+            st = self.stats
+            with st.lock:
+                st.n_requests += decision.take
+                st.n_batches += 1
+                st.batches_per_bucket[decision.bucket] = (
+                    st.batches_per_bucket.get(decision.bucket, 0) + 1)
+                st.padded_rows_total += decision.bucket - decision.take
+                st.compute_ms_total += (t1 - t0) * 1e3
+                st.latency_ms.extend(lat)
+            # futures resolve in submit order (items popped FIFO)
+            for (_, _, fut), score, l in zip(items, scores, lat):
+                fut._resolve(float(score), l)
+            self._maybe_auto_refresh()
+            return scores
 
     # -- one-shot --------------------------------------------------------------
     def predict(self, ids) -> np.ndarray:

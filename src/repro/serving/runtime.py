@@ -8,7 +8,7 @@ tier. ``ServingRuntime`` is that router over ``InferenceEngine``s:
     rt = ServingRuntime()
     rt.add_model("deepfm", deepfm, p1, policy=TimeoutBatch())
     rt.add_model("dcnv2", dcnv2, p2, store=CachedStore(...))
-    rt.start()                       # one background worker per engine
+    rt.start()                       # shared pool drains every engine
     fut = rt.submit("deepfm", row)   # routed by model name
     fut.result()
     rt.stats().p99_ms                # aggregated across engines
@@ -19,8 +19,13 @@ The runtime owns
 * **per-model routing**: ``submit``/``predict`` dispatch on the model
   name; unknown names fail fast with the hosted set in the message;
 * **lifecycle fan-out**: ``start``/``stop``/``warmup``/``flush`` reach
-  every engine (each engine drains its own queue on its own worker
-  thread — the intake never blocks on another model's batch);
+  every engine. By default ``start()`` attaches every engine to one
+  shared :class:`~repro.serving.DeviceScheduler` — ``pool_size``
+  threads drain *all* queues least-SLO-slack-first, so hosting N models
+  costs a constant thread count and a starved model's ``TimeoutBatch``
+  deadline outranks a busy model's full buckets
+  (``scheduler="per-engine"`` keeps the old worker-thread-per-engine
+  mode; scores are bit-exact either way);
 * **shared admission cadence**: with ``refresh_every=N`` the runtime
   counts *total* submitted traffic across models and refreshes every
   refreshable embedding store each time N more requests arrived — one
@@ -42,6 +47,7 @@ import numpy as np
 
 from .engine import (AGGREGATED_COUNTERS, EngineStats, InferenceEngine,
                      RequestFuture)
+from .scheduler import DeviceScheduler
 
 __all__ = ["ServingRuntime", "RuntimeStats"]
 
@@ -52,8 +58,13 @@ class RuntimeStats:
 
     ``p50_ms``/``p99_ms`` are computed over the *union* of the engines'
     rolling latency windows (recent samples, same caveat as
-    ``EngineStats``). ``per_model`` holds the live per-engine stats
-    objects for drill-down. Every counter named in
+    ``EngineStats``). ``per_model`` holds a *snapshot* of each engine's
+    stats, taken under that engine's lock (``EngineStats.snapshot``) —
+    drill-down counters are consistent and never mutate under the
+    reader; re-call :meth:`ServingRuntime.stats` for fresh numbers.
+    ``device_time_share`` sums the per-engine shares, so it reads ~1.0
+    when a shared scheduler has dispatched anything and 0.0 in
+    per-engine-worker mode. Every counter named in
     ``engine.AGGREGATED_COUNTERS`` is a field here — :meth:`stats` sums
     them generically, and the import-time check below keeps the two
     definitions from drifting.
@@ -63,6 +74,7 @@ class RuntimeStats:
     n_batches: int
     n_rejected: int
     queue_depth: int
+    n_worker_errors: int
     p50_ms: float
     p99_ms: float
     cache_hits: int
@@ -78,6 +90,9 @@ class RuntimeStats:
     mlp_quant_matmuls: int
     mlp_quant_weight_bytes: int
     mlp_quant_weight_bytes_saved: int
+    sched_dispatches: int
+    sched_preempted_slack_ms: float
+    device_time_share: float
     per_model: dict[str, EngineStats]
 
 
@@ -102,12 +117,35 @@ class ServingRuntime:
             batches sharded over the data axis, and the shared admission
             refreshes republish store tensors placed to the plans'
             shardings (never unplaced host arrays).
+        scheduler: how :meth:`start` drains the hosted queues.
+            ``"shared"`` (default): one :class:`DeviceScheduler` —
+            ``pool_size`` threads serve every engine least-slack-first
+            (thread count stays constant as models scale). A
+            ``DeviceScheduler`` instance uses that scheduler (e.g. one
+            pool shared across several runtimes on one device).
+            ``"per-engine"``: the pre-scheduler compat mode, one worker
+            thread per engine.
+        pool_size: worker threads for the shared scheduler (ignored in
+            ``"per-engine"`` mode or when a scheduler instance is
+            passed).
     """
 
-    def __init__(self, *, refresh_every: int | None = None, mesh=None):
+    def __init__(self, *, refresh_every: int | None = None, mesh=None,
+                 scheduler: str | DeviceScheduler = "shared",
+                 pool_size: int = 2):
         self._engines: dict[str, InferenceEngine] = {}
         self.refresh_every = refresh_every
         self.mesh = mesh
+        if isinstance(scheduler, DeviceScheduler):
+            self.scheduler_mode = "shared"
+            self._scheduler: DeviceScheduler | None = scheduler
+        elif scheduler in ("shared", "per-engine"):
+            self.scheduler_mode = scheduler
+            self._scheduler = None
+        else:
+            raise ValueError(f"scheduler must be 'shared', 'per-engine' or "
+                             f"a DeviceScheduler, got {scheduler!r}")
+        self.pool_size = pool_size
         self._submitted = 0
         self._refreshing = False
         self._refresh_thread: threading.Thread | None = None
@@ -148,22 +186,51 @@ class ServingRuntime:
         for eng in self._engines.values():
             eng.warmup()
 
+    @property
+    def scheduler(self) -> DeviceScheduler | None:
+        """The shared scheduler (None before ``start()`` or in
+        per-engine mode)."""
+        return self._scheduler
+
     def start(self) -> "ServingRuntime":
-        """Start every engine's background worker. Idempotent."""
-        for eng in self._engines.values():
-            eng.start()
+        """Start draining. Default (``scheduler="shared"``): attach every
+        hosted engine to one :class:`DeviceScheduler` and start its
+        ``pool_size``-thread pool — constant thread count however many
+        models are hosted. Per-engine mode: one worker thread per engine
+        (the pre-scheduler behaviour). Idempotent; engines added after a
+        ``start()`` are picked up by calling it again."""
+        if self.scheduler_mode == "shared":
+            if self._scheduler is None:
+                self._scheduler = DeviceScheduler(pool_size=self.pool_size)
+            for name, eng in self._engines.items():
+                self._scheduler.attach(name, eng)
+            self._scheduler.start()
+        else:
+            for eng in self._engines.values():
+                eng.start()
         return self
 
     def stop(self, flush: bool = True) -> None:
-        """Stop every worker; with ``flush`` (default) force-drain the
-        leftover queues so no future stays unresolved. Joins any in-flight
-        shared-admission refresh."""
+        """Stop the shared pool and/or every worker; with ``flush``
+        (default) force-drain the leftover queues so no future stays
+        unresolved. Joins any in-flight shared-admission refresh. Every
+        engine is stopped even if one raises; the first swallowed
+        background-drain error (``EngineStats.n_worker_errors``) is
+        re-raised at the end."""
+        if self._scheduler is not None:
+            self._scheduler.stop()
+        errors: list[BaseException] = []
         for eng in self._engines.values():
-            eng.stop(flush=flush)
+            try:
+                eng.stop(flush=flush)
+            except Exception as exc:        # surface after stopping the rest
+                errors.append(exc)
         with self._admission_lock:
             t, self._refresh_thread = self._refresh_thread, None
         if t is not None and t.is_alive():
             t.join()
+        if errors:
+            raise errors[0]
 
     # -- intake --------------------------------------------------------------
     def submit(self, model: str, ids_row: np.ndarray) -> RequestFuture:
@@ -243,5 +310,6 @@ class ServingRuntime:
             n_models=len(self._engines),
             p50_ms=float(np.percentile(lat, 50)) if lat else 0.0,
             p99_ms=float(np.percentile(lat, 99)) if lat else 0.0,
-            per_model={n: e.stats for n, e in self._engines.items()},
+            per_model={n: e.stats.snapshot()
+                       for n, e in self._engines.items()},
             **tot)

@@ -364,7 +364,13 @@ def test_runtime_routes_two_models_async_bit_exact():
     agg = rt.stats()
     assert agg.n_models == 2 and agg.n_requests == 42
     assert agg.queue_depth == 0
-    assert agg.per_model["widedeep"] is rt.engine("widedeep").stats
+    # per_model is a consistent snapshot, not the live (mutating) object
+    snap = agg.per_model["widedeep"]
+    live = rt.engine("widedeep").stats
+    assert snap is not live
+    assert snap.n_requests == live.n_requests == 21
+    rt.engine("widedeep").predict(rows_of(1)[0])
+    assert snap.n_requests == 21          # later traffic never mutates it
     assert agg.p99_ms >= agg.p50_ms >= 0.0
 
 
