@@ -33,7 +33,8 @@ def main() -> None:
     from . import (accuracy_parity, breakdown, e2e_speedup, embedding_cache,
                    embedding_host, embedding_sensitivity, mlp_quant,
                    roofline_report, scheduling, serving_async,
-                   serving_batching, serving_mesh, workload_allocation)
+                   serving_batching, serving_mesh, serving_updates,
+                   workload_allocation)
     suites = {
         "accuracy_parity": accuracy_parity,       # Table I
         "e2e_speedup": e2e_speedup,               # Fig. 7 / Table II
@@ -46,6 +47,7 @@ def main() -> None:
         "scheduling": scheduling,                 # Fig. 12/13
         "serving_batching": serving_batching,     # Fig. 7 serving policies
         "serving_async": serving_async,           # async runtime + refresh
+        "serving_updates": serving_updates,       # online trainer deltas
         "serving_mesh": serving_mesh,             # multi-chip plans+refresh
         "roofline_report": roofline_report,       # §Roofline
     }

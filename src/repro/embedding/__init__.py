@@ -16,7 +16,8 @@ stores' misses via ``stage``/``prefetch_hint``.
 """
 
 from .spec import FusedEmbeddingSpec
-from .store import DenseStore, EmbeddingStore, StoreStats, runtime_edge
+from .store import (DenseStore, EmbeddingStore, StoreStats, runtime_edge,
+                    validate_deltas)
 from .cached import CachedStore
 from .host import HostBackedStore
 from .prefetch import PrefetchPipeline, StagingOverflowError
@@ -34,4 +35,5 @@ __all__ = [
     "FusedEmbeddingCollection",
     "sharded_vocab_lookup",
     "runtime_edge",
+    "validate_deltas",
 ]

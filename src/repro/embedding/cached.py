@@ -50,7 +50,7 @@ from repro import quant
 from repro.kernels import ops as kops
 
 from .spec import FusedEmbeddingSpec
-from .store import EmbeddingStore
+from .store import EmbeddingStore, validate_deltas
 
 __all__ = ["CachedStore"]
 
@@ -225,6 +225,50 @@ class CachedStore(EmbeddingStore):
         self.stats.refreshes += 1
         return self._with_cache(params["backing"], new_map,
                                 params.get("backing_scale"))
+
+    def apply_deltas(self, params: dict, row_ids, new_rows
+                     ) -> tuple[dict, int]:
+        """Scatter online trainer deltas into backing **and** cache.
+
+        Functional (``.at[].set`` builds new arrays): the subtree handed
+        back shares every untouched row with the old one, and the caller
+        publishes it through the double-buffered swap — readers of the old
+        subtree keep a consistent pre-delta view, so a torn update is
+        impossible by construction. Rows currently cached get their cache
+        slot rewritten too (cache rows stay verbatim copies of backing
+        rows — the tier invariant deltas must preserve); the index map is
+        untouched, so admission state survives value updates. Quantized
+        stores re-quantize the incoming fp32 rows **once** here
+        (``repro.quant``), updating the per-row scales alongside the int8
+        payloads.
+        """
+        rows_idx, vals = validate_deltas(self.spec, row_ids, new_rows)
+        n = int(rows_idx.size)
+        if n == 0:
+            return params, 0
+        idx = jnp.asarray(rows_idx)
+        out = dict(params)
+        if self.quantized:
+            q, scale = quant.quantize_rows(np.asarray(vals))
+            self.stats.quant_rows += n
+            wire = jnp.asarray(q)
+            out["backing"] = params["backing"].at[idx].set(wire)
+            out["backing_scale"] = \
+                params["backing_scale"].at[idx].set(jnp.asarray(scale))
+        else:
+            wire = jnp.asarray(vals)
+            out["backing"] = params["backing"].at[idx].set(wire)
+        slots = self._slot_of_row[rows_idx]
+        cached = np.flatnonzero(slots >= 0)
+        if cached.size:
+            cidx = jnp.asarray(slots[cached])
+            out["cache"] = params["cache"].at[cidx].set(
+                wire[jnp.asarray(cached)])
+            if self.quantized:
+                out["cache_scale"] = params["cache_scale"].at[cidx].set(
+                    jnp.asarray(scale[cached]))
+        self.stats.delta_rows += n
+        return out, n
 
     @property
     def cached_traffic_fraction(self) -> float:

@@ -48,7 +48,7 @@ from repro.kernels import ops as kops
 
 from .prefetch import PrefetchPipeline, StagingOverflowError
 from .spec import FusedEmbeddingSpec
-from .store import EmbeddingStore
+from .store import EmbeddingStore, validate_deltas
 
 __all__ = ["HostBackedStore"]
 
@@ -187,20 +187,26 @@ class HostBackedStore(EmbeddingStore):
     def open(cls, spec: FusedEmbeddingSpec, capacity: int,
              backing_path: str | os.PathLike,
              staging_capacity: int | None = None,
-             row_dtype: str | None = None) -> "HostBackedStore":
+             row_dtype: str | None = None,
+             mode: str = "r") -> "HostBackedStore":
         """Attach an existing on-disk backing (written by a prior
         :meth:`init`/:meth:`adopt` with the same spec) without copying it
         into RAM — the disk third tier's load path. ``row_dtype`` must
         match what the file was written with (int8 backings carry their
-        scales in the ``backing_path + ".scale"`` sidecar)."""
+        scales in the ``backing_path + ".scale"`` sidecar). ``mode="r"``
+        (default) maps the file read-only — :meth:`apply_deltas` then
+        rejects pushes; reopen with ``mode="r+"`` to serve a backing that
+        also accepts online trainer deltas."""
+        if mode not in ("r", "r+"):
+            raise ValueError(f"mode must be 'r' or 'r+', got {mode!r}")
         store = cls(spec, capacity, staging_capacity=staging_capacity,
                     backing_path=backing_path, row_dtype=row_dtype)
         wire = np.int8 if store.quantized else np.dtype(spec.dtype)
         store._backing = np.memmap(store.backing_path, dtype=wire,
-                                   mode="r", shape=(spec.rows, spec.dim))
+                                   mode=mode, shape=(spec.rows, spec.dim))
         if store.quantized:
             store._backing_scale = np.memmap(
-                store._scale_path, dtype=np.float32, mode="r",
+                store._scale_path, dtype=np.float32, mode=mode,
                 shape=(spec.rows, 1))
         return store
 
@@ -413,6 +419,74 @@ class HostBackedStore(EmbeddingStore):
         self.pipeline.drop(hot)
         self.stats.refreshes += 1
         return self.device_params()
+
+    def apply_deltas(self, params: dict, row_ids, new_rows
+                     ) -> tuple[dict, int]:
+        """Write online trainer deltas through all three tiers.
+
+        The host backing (RAM array or writable memmap) is updated in
+        place — under the prefetch pipeline's staging lock, so a
+        concurrent ``ensure``/``hint`` gather can never see a half-written
+        row — and any of the updated rows already sitting in staging slots
+        are re-gathered before the lock drops (stale staged copies would
+        otherwise serve until eviction). Cached rows get their device
+        cache slot rewritten functionally, and the returned subtree
+        carries fresh staging leaves (the pipeline version bump forces the
+        re-upload). Quantized stores re-quantize the incoming fp32 rows
+        once, updating the scale sidecar alongside the int8 payload.
+
+        One sharing caveat the A/B scenario must know: unlike
+        ``CachedStore`` — whose device tensors are immutable, so a second
+        engine's published subtree stays pinned pre-delta — the host
+        backing is *store state shared by every engine serving through
+        this object*; staged rows re-gathered after a delta see the new
+        values on every engine. Version-pinned A/B needs device-resident
+        stores (or two host stores over separate backings).
+        """
+        rows_idx, vals = validate_deltas(self.spec, row_ids, new_rows)
+        n = int(rows_idx.size)
+        if n == 0:
+            return params, 0
+        backing = self.host_view()
+        if not backing.flags.writeable:
+            if isinstance(backing, np.memmap):
+                raise ValueError(
+                    "host backing is a read-only memmap "
+                    "(HostBackedStore.open defaults to mode='r'); reopen "
+                    "with mode='r+' to accept online deltas")
+            # adopt() aliased the source table zero-copy (np.asarray of a
+            # device array is read-only): promote to a private writable
+            # copy once, on the first push
+            self._backing = backing = backing.copy()
+        if self.quantized:
+            q, scale = quant.quantize_rows(np.asarray(vals))
+            self.stats.quant_rows += n
+            wire = q
+
+            def write():
+                backing[rows_idx] = q
+                self.host_scale_view()[rows_idx] = scale
+        else:
+            wire = np.asarray(vals)
+
+            def write():
+                backing[rows_idx] = wire
+        self.pipeline.apply_backing_update(rows_idx, write)
+        out = dict(params)
+        slots = self._slot_of_row[rows_idx]
+        cached = np.flatnonzero(slots >= 0)
+        if cached.size:
+            cidx = jnp.asarray(slots[cached])
+            out["cache"] = params["cache"].at[cidx].set(
+                jnp.asarray(wire[cached]))
+            if self.quantized:
+                out["cache_scale"] = params["cache_scale"].at[cidx].set(
+                    jnp.asarray(scale[cached]))
+        # fresh staging leaves: a bumped pipeline version re-uploads the
+        # refreshed slots; untouched staging reuses the previous upload
+        out.update(self._staging_leaves())
+        self.stats.delta_rows += n
+        return out, n
 
     @property
     def cached_traffic_fraction(self) -> float:

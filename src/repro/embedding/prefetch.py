@@ -165,6 +165,37 @@ class PrefetchPipeline:
             return self._buf.copy(), sbuf, self._slot_of_staged.copy(), \
                 self._version
 
+    def apply_backing_update(self, rows: np.ndarray, write) -> int:
+        """Run ``write()`` (a host-backing mutation covering ``rows``)
+        under the staging lock, then re-gather any of those rows already
+        sitting in staging slots so the buffer never serves stale values.
+
+        The lock ordering is the point: the worker's speculative staging
+        and the serve thread's ``ensure`` gather backing rows under this
+        same lock, so the in-place backing write can never be observed
+        half-done — a staged row is either entirely pre-delta or entirely
+        post-delta. Returns how many staged slots were refreshed; any
+        refresh bumps the version so the store's next snapshot re-uploads.
+        """
+        rows = np.asarray(rows).reshape(-1)
+        with self._lock:
+            write()
+            backing = self._store.host_view()
+            scales = self._store.host_scale_view() if self._sbuf is not None \
+                else None
+            refreshed = 0
+            for row in rows:
+                slot = int(self._slot_of_staged[int(row)])
+                if slot < 0:
+                    continue
+                self._buf[slot] = backing[int(row)]
+                if scales is not None:
+                    self._sbuf[slot] = scales[int(row)]
+                refreshed += 1
+            if refreshed:
+                self._version += 1
+            return refreshed
+
     def drop(self, rows: np.ndarray) -> int:
         """Evict ``rows`` from staging (refresh promoted them into the
         device cache — their slots are better spent on cold rows)."""

@@ -37,7 +37,8 @@ from repro.kernels import ops as kops
 
 from .spec import FusedEmbeddingSpec
 
-__all__ = ["StoreStats", "EmbeddingStore", "DenseStore", "runtime_edge"]
+__all__ = ["StoreStats", "EmbeddingStore", "DenseStore", "runtime_edge",
+           "validate_deltas"]
 
 
 def runtime_edge(prefix: str, leaf: str) -> str:
@@ -51,6 +52,39 @@ def runtime_edge(prefix: str, leaf: str) -> str:
     function so the convention can never drift.
     """
     return f"{prefix}:{leaf}"
+
+
+def validate_deltas(spec: FusedEmbeddingSpec, row_ids, new_rows
+                    ) -> tuple[np.ndarray, np.ndarray]:
+    """Canonicalize one ``(row_id, new_row)`` delta batch.
+
+    Shared by every store's ``apply_deltas``: ``row_ids`` become a unique
+    int64 vector (duplicates keep the **last** occurrence — the stream is
+    ordered, and a scatter with duplicate indices has no defined winner),
+    ``new_rows`` the matching ``(n, d)`` full-precision array. Rejects
+    out-of-range ids and — hard — any id at or past ``spec.zero_row``:
+    the zero row and the padding rows must stay zero for multi-hot
+    masking, so a trainer can never push values into them.
+    """
+    row_ids = np.asarray(row_ids, dtype=np.int64).reshape(-1)
+    rows = np.asarray(new_rows, dtype=np.dtype(spec.dtype))
+    if rows.ndim == 1:
+        rows = rows[None, :]
+    if rows.shape != (row_ids.size, spec.dim):
+        raise ValueError(f"delta rows shape {rows.shape} != "
+                         f"{(row_ids.size, spec.dim)}")
+    if row_ids.size == 0:
+        return row_ids, rows
+    if row_ids.min() < 0 or row_ids.max() >= spec.zero_row:
+        bad = row_ids[(row_ids < 0) | (row_ids >= spec.zero_row)]
+        raise ValueError(
+            f"delta row ids {bad[:8].tolist()} out of range [0, "
+            f"{spec.zero_row}) — the zero row and padding rows must stay "
+            "zero (multi-hot masking depends on it)")
+    # keep the LAST occurrence of each duplicated id (stream order wins)
+    _, first_in_reversed = np.unique(row_ids[::-1], return_index=True)
+    keep = row_ids.size - 1 - first_in_reversed
+    return row_ids[keep], rows[keep]
 
 
 @dataclasses.dataclass
@@ -75,8 +109,12 @@ class StoreStats:
     the device-side gather traffic of observed lookups (rows × wire bytes);
     the ``quant_*`` pair is nonzero only for quantized stores:
     ``quant_rows`` counts rows pushed through ``repro.quant`` at
-    init/adopt/refresh time, ``quant_bytes_saved`` the gather bytes the
-    int8 representation avoided vs full-precision rows.
+    init/adopt/refresh/delta time, ``quant_bytes_saved`` the gather bytes
+    the int8 representation avoided vs full-precision rows.
+
+    ``delta_rows`` counts rows whose *values* changed through
+    :meth:`EmbeddingStore.apply_deltas` (online trainer pushes) — distinct
+    from ``refreshes``, which only re-admits existing values.
     """
     hits: int = 0
     misses: int = 0
@@ -88,6 +126,7 @@ class StoreStats:
     gather_bytes: int = 0
     quant_rows: int = 0
     quant_bytes_saved: int = 0
+    delta_rows: int = 0
 
     @property
     def lookups(self) -> int:
@@ -249,6 +288,27 @@ class EmbeddingStore:
         """Rebuild any cache tier from observed traffic; returns the
         (possibly new) param subtree. No-op for cacheless stores."""
         return params
+
+    def apply_deltas(self, params: dict, row_ids, new_rows
+                     ) -> tuple[dict, int]:
+        """Apply online ``(row_id, new_row)`` parameter deltas (a live
+        trainer's incremental push) and return ``(fresh_subtree,
+        n_rows_applied)``.
+
+        The fresh subtree is built **on the side** — the caller publishes
+        it through the same double-buffered swap as a refresh, so compiled
+        plans survive every delta batch with zero recompiles. Incoming
+        rows are always full-precision; quantized stores re-quantize them
+        through ``repro.quant`` before publish. Only stores whose tensors
+        are runtime plan inputs can support this — ``DenseStore`` bakes
+        its ``mega_table`` into every compiled plan as a constant, so
+        updated values could never reach a cached plan.
+        """
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support online deltas: its "
+            "tensors are compiled into plans as constants, not runtime "
+            "inputs. Serve through CachedStore or HostBackedStore (their "
+            "tiers republish through the recompile-free swap).")
 
     @property
     def cached_traffic_fraction(self) -> float:

@@ -5,6 +5,10 @@
     PYTHONPATH=src python -m repro.launch.serve --models deepfm,dcnv2 --async
     PYTHONPATH=src python -m repro.launch.serve --mode lm --arch llama3-8b
 
+    # online model updates: stream synthetic trainer deltas while serving
+    PYTHONPATH=src python -m repro.launch.serve --store cached \\
+        --delta-every 100 --delta-rows 256
+
     # multi-chip serving on a simulated 8-device CPU mesh:
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
     PYTHONPATH=src python -m repro.launch.serve --mesh data=4,model=2 \\
@@ -115,7 +119,8 @@ def serve_ctr(args) -> None:
               f"{mesh.devices.size} devices")
     rt = ServingRuntime(refresh_every=args.runtime_refresh_every,
                         mesh=mesh, scheduler=args.sched,
-                        pool_size=args.pool_size)
+                        pool_size=args.pool_size,
+                        delta_every=args.delta_every)
     for name in names:
         spec = ctr_spec(name, "criteo", 16, 256, max_field=100_000)
         model = CTR_MODELS[name](spec)
@@ -140,6 +145,20 @@ def serve_ctr(args) -> None:
                      policy=_make_policy(args), store=store,
                      refresh_every=args.refresh_every,
                      compute_dtype=args.mlp_dtype)
+    if args.delta_every:
+        if args.store == "dense":
+            raise SystemExit("--delta-every needs a refreshable store "
+                             "(--store cached or host); DenseStore tensors "
+                             "are compiled into plans as constants")
+        from repro.serving import SyntheticTrainer
+        # one synthetic trainer per model: enough batches that the stream
+        # outlives the traffic, drained on the shared admission clock
+        n_batches = max(1, args.requests // args.delta_every)
+        for i, name in enumerate(names):
+            trainer = SyntheticTrainer(rt.engine(name).store.spec,
+                                       rows_per_batch=args.delta_rows,
+                                       n_batches=n_batches, seed=i)
+            rt.attach_delta_stream(name, trainer)
     rt.warmup()
     ids = _traffic(args, schema)
 
@@ -174,6 +193,18 @@ def serve_ctr(args) -> None:
               f"{agg.n_requests} requests in {agg.n_batches} batches  "
               f"p50={agg.p50_ms:.1f}ms p99={agg.p99_ms:.1f}ms  "
               f"refreshes={agg.emb_cache_refreshes}")
+    if args.delta_every:
+        # join any in-flight background pull (stop() is idempotent — the
+        # async path already called it), then drain what the cadence
+        # didn't reach so the summary is deterministic, not a race
+        # against the pull thread
+        rt.stop()
+        rt.pull_updates()
+        agg = rt.stats()
+        print(f"[serve:delta] pushes={agg.emb_delta_pushes} "
+              f"rows={agg.emb_delta_rows} version=v{agg.emb_version} "
+              f"behind={agg.rows_behind}rows/"
+              f"{agg.seconds_behind * 1e3:.1f}ms")
     sched = rt.scheduler
     if args.use_async and sched is not None:
         shares = " ".join(f"{n}={s:.1%}" for n, s in sorted(
@@ -254,6 +285,14 @@ def main() -> None:
     ap.add_argument("--runtime-refresh-every", type=int, default=None,
                     help="runtime-wide: refresh all stores every N "
                          "submitted requests across models")
+    ap.add_argument("--delta-every", type=int, default=None,
+                    help="online model updates: pull a synthetic trainer's "
+                         "delta stream every N submitted requests across "
+                         "models (versioned double-buffered publish — no "
+                         "recompiles); needs --store cached or host")
+    ap.add_argument("--delta-rows", type=int, default=256,
+                    help="embedding rows per synthetic delta batch for "
+                         "--delta-every")
     ap.add_argument("--zipf", type=float, default=None,
                     help="zipf exponent for request traffic (default: "
                          "uniform random ids)")

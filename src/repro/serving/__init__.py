@@ -6,7 +6,10 @@ CTR flow:  ``compile_plan`` (repro.core.plan) → ``InferencePlan`` →
 async intake) → ``ServingRuntime`` (multi-model router, shared admission
 cadence) draining through a ``DeviceScheduler`` (one shared worker pool
 serving every hosted engine least-SLO-slack-first; per-engine worker
-threads remain as a compat mode).
+threads remain as a compat mode). Online model updates stream in through
+``repro.serving.updates`` (``DeltaSource``/``DeltaBuffer``/
+``SyntheticTrainer``) and land via ``push_update``'s versioned
+double-buffered publish — serving never pauses, plans never recompile.
 """
 
 from .batching import (BatchDecision, BatchPolicy, BucketedBatch, FixedBatch,
@@ -15,6 +18,7 @@ from .engine import (EngineStats, InferenceEngine, QueueFullError,
                      ReadyBatch, RequestFuture)
 from .runtime import RuntimeStats, ServingRuntime
 from .scheduler import DeviceScheduler
+from .updates import DeltaBuffer, DeltaSource, SyntheticTrainer
 from .generate import generate
 
 __all__ = [
@@ -31,5 +35,8 @@ __all__ = [
     "FixedBatch",
     "BucketedBatch",
     "TimeoutBatch",
+    "DeltaSource",
+    "DeltaBuffer",
+    "SyntheticTrainer",
     "generate",
 ]

@@ -43,7 +43,15 @@ The engine owns
   store's async prefetch worker so the host-side gather runs off the
   critical path. A miss set too big for the staging buffer falls back to
   serving the batch in chunks through the same plan — slower, never
-  wrong.
+  wrong;
+* **online model updates** (``push_update``/``pull_updates``): a live
+  trainer's ``(row_id, new_row)`` delta stream lands through that same
+  double-buffered publish — fresh store tiers built on the side, one
+  atomic swap stamped with a monotonic ``emb_version`` — so parameter
+  *values* change under live traffic with zero recompiles and no torn
+  reads (hard-asserted), with staleness observable as
+  ``stats.rows_behind``/``seconds_behind`` (HugeCTR's incremental-update
+  pipeline over DPIFrame plans; sources live in ``serving/updates.py``).
 """
 
 from __future__ import annotations
@@ -83,6 +91,10 @@ _STORE_MIRROR = {
     "quant_rows": "emb_quant_rows",
     "quant_bytes_saved": "emb_quant_bytes_saved",
 }
+# NOTE: StoreStats.delta_rows is deliberately NOT mirrored: two engines may
+# share one store (A/B over a common backing), and a mirror would credit
+# every engine with every push. ``push_update`` counts its own
+# ``emb_delta_rows``, so per-engine and runtime totals stay exact.
 
 #: ExecutorStats attribute -> the EngineStats counter accumulating it once
 #: per *plan compile* (weight bytes are a property of the compiled plan,
@@ -104,10 +116,13 @@ AGGREGATED_COUNTERS = (
     "emb_cache_refreshes", "emb_staged_rows", "emb_prefetched_rows",
     "emb_h2d_bytes", "emb_staging_overflows", "emb_gather_bytes",
     "emb_quant_rows", "emb_quant_bytes_saved",
+    "emb_delta_pushes", "emb_delta_rows", "rows_behind",
     "mlp_quant_matmuls", "mlp_quant_weight_bytes",
     "mlp_quant_weight_bytes_saved",
     "sched_dispatches", "sched_preempted_slack_ms", "device_time_share",
 )
+# emb_version and seconds_behind are aggregated by MAX, not sum — the
+# runtime handles them as customs (a sum of versions means nothing).
 
 
 @dataclasses.dataclass(frozen=True)
@@ -247,6 +262,20 @@ class EngineStats:
     ``emb_quant_bytes_saved`` — gather bytes the int8 representation
     avoided) is nonzero only for ``row_dtype="int8"`` stores.
 
+    The online-update group tracks delta-stream freshness:
+    ``emb_version`` is the monotonic version of the engine's published
+    embedding tensor set — 0 at load, +1 per applied ``push_update``
+    batch; the publish and the bump happen atomically under this lock,
+    and ``InferenceEngine._runtime_env`` hard-asserts the sequence every
+    compiled step observes never runs backwards. ``emb_delta_pushes`` /
+    ``emb_delta_rows`` count applied batches and deduped rows (engine's
+    own pushes only — a store shared A/B-style across engines is not
+    double-counted). ``rows_behind``/``seconds_behind`` are staleness
+    *gauges* refreshed from the attached :class:`~repro.serving.updates.
+    DeltaSource` on every pull: delta rows queued but not yet applied,
+    and the age of the oldest of them (both 0 when caught up or when no
+    source is attached).
+
     The ``mlp_quant_*`` trio mirrors the quantized-*compute* half
     (``compute_dtype="int8"`` plans): ``mlp_quant_matmuls`` counts int8
     matmul dispatches across served batches, and the weight-byte pair
@@ -295,6 +324,11 @@ class EngineStats:
     emb_gather_bytes: int = 0
     emb_quant_rows: int = 0
     emb_quant_bytes_saved: int = 0
+    emb_version: int = 0
+    emb_delta_pushes: int = 0
+    emb_delta_rows: int = 0
+    rows_behind: int = 0
+    seconds_behind: float = 0.0
     mlp_quant_matmuls: int = 0
     mlp_quant_weight_bytes: int = 0
     mlp_quant_weight_bytes_saved: int = 0
@@ -447,6 +481,10 @@ class InferenceEngine:
         self._worker: threading.Thread | None = None
         self._running = False
         self._scheduler = None        # set by DeviceScheduler.attach
+        self._delta_source = None     # set by attach_delta_source
+        # highest emb_version any compiled step has observed — the floor
+        # the _runtime_env monotonicity hard-assert enforces
+        self._version_floor = 0
         self.worker_error: BaseException | None = None
         self.stats = EngineStats(latency_window=latency_window)
         staging = self._staging_store
@@ -464,12 +502,29 @@ class InferenceEngine:
 
     def _runtime_env(self) -> dict:
         """Current runtime store tensors for compiled plans — re-read on
-        every step call, so one atomic ``self.params`` swap (a refresh)
-        retargets every cached plan. Same duck-typing guard as
-        ``compile_plan``: models without the store surface have none."""
-        if hasattr(self.model, "store_runtime_env"):
+        every step call, so one atomic ``self.params`` swap (a refresh or
+        a delta publish) retargets every cached plan. Same duck-typing
+        guard as ``compile_plan``: models without the store surface have
+        none.
+
+        The params read and the version read happen under the stats lock
+        — the same lock ``push_update`` publishes under — so the pair is
+        consistent, and the **version-monotonicity hard-assert** holds:
+        the env a step binds always belongs to a version >= every version
+        previously observed. A torn update (old tensors after a newer
+        publish) would trip this immediately.
+        """
+        if not hasattr(self.model, "store_runtime_env"):
+            return {}
+        with self.stats.lock:
+            v = self.stats.emb_version
+            if v < self._version_floor:
+                raise AssertionError(
+                    f"embedding version ran backwards: step observed "
+                    f"v{v} after v{self._version_floor} was already "
+                    "served — torn/reordered publish")
+            self._version_floor = v
             return self.model.store_runtime_env(self.params)
-        return {}
 
     def _observe_traffic(self, rows: np.ndarray) -> None:
         """Feed served ids to the store's admission counters and mirror
@@ -592,6 +647,93 @@ class InferenceEngine:
         if (self.refresh_every
                 and self.stats.n_batches % self.refresh_every == 0):
             self.refresh_cache()
+
+    # -- online deltas (live-trainer pushes) ----------------------------------
+    def push_update(self, row_ids, new_rows) -> int:
+        """Apply one batch of online ``(row_id, new_row)`` parameter
+        deltas; returns how many (deduped) rows were applied.
+
+        Rides the exact machinery a refresh uses: the store scatters the
+        deltas into a *fresh* subtree on the side (``apply_deltas`` —
+        backing + cache + staging tiers all updated, fp32 rows
+        re-quantized for int8 stores), the engine places it to the plans'
+        shardings when a mesh is set, and publishes it in one atomic
+        reference swap **stamped with the next ``emb_version``** — bump
+        and swap under one lock, so the version a compiled step observes
+        is always monotonic (hard-asserted in ``_runtime_env``) and a
+        plan binds either the entire pre-push set or the entire post-push
+        set, never a mix. Zero recompiles: every updated tensor is a
+        runtime plan input.
+
+        Requires a refreshable store (``CachedStore``/``HostBackedStore``
+        — raises ``ValueError`` otherwise: ``DenseStore`` tensors are
+        baked constants of every compiled plan, unreachable by a swap).
+        An engine sharing its store with another engine is unaffected by
+        the *other* engine's pushes — its published subtree pins the
+        pre-push version (the A/B / shadow-model scenario; see the
+        ``HostBackedStore.apply_deltas`` caveat for the host tier).
+        """
+        store = self.store
+        if store is None or not store.refreshable:
+            raise ValueError(
+                "push_update needs a refreshable embedding store "
+                "(CachedStore / HostBackedStore); this engine serves "
+                f"{store.describe() if store is not None else 'no store'}, "
+                "whose tensors are compiled into plans as constants — "
+                "rebuild params and re-compile to change them")
+        with self._drain_lock:
+            key = getattr(self.model, "main_embedding_key", "emb")
+            fresh, n = store.apply_deltas(self.params[key], row_ids,
+                                          new_rows)
+            if n == 0:
+                return 0
+            if self.mesh is not None:
+                fresh = store.place(fresh, self.mesh)
+            with self.stats.lock:
+                self.params = {**self.params, key: fresh}  # atomic publish
+                self.stats.emb_version += 1
+                self.stats.emb_delta_pushes += 1
+                self.stats.emb_delta_rows += n
+            return n
+
+    def attach_delta_source(self, source) -> None:
+        """Bind a :class:`~repro.serving.updates.DeltaSource` this engine
+        pulls from (``pull_updates``, or the runtime's ``delta_every``
+        cadence); its queue depth feeds the ``rows_behind`` /
+        ``seconds_behind`` staleness gauges."""
+        self._delta_source = source
+        self.poll_staleness()
+
+    def pull_updates(self, max_batches: int | None = None) -> int:
+        """Drain the attached delta source (up to ``max_batches``)
+        through :meth:`push_update`; returns total rows applied and
+        refreshes the staleness gauges. 0 when no source is attached."""
+        src = self._delta_source
+        if src is None:
+            return 0
+        applied = 0
+        pulled = 0
+        while max_batches is None or pulled < max_batches:
+            batch = src.next_batch()
+            if batch is None:
+                break
+            pulled += 1
+            applied += self.push_update(*batch)
+        self.poll_staleness()
+        return applied
+
+    def poll_staleness(self) -> None:
+        """Re-read the attached delta source's backlog into the
+        ``rows_behind``/``seconds_behind`` gauges (no-op without a
+        source). ``ServingRuntime.stats`` polls before every snapshot so
+        the aggregate reflects the queue *now*, not as of the last
+        pull."""
+        src = self._delta_source
+        rows = src.pending_rows() if src is not None else 0
+        age = src.oldest_pending_s() if src is not None else 0.0
+        with self.stats.lock:
+            self.stats.rows_behind = int(rows)
+            self.stats.seconds_behind = float(age)
 
     # -- plan cache ----------------------------------------------------------
     def _plan_key(self, bucket: int) -> PlanKey:

@@ -32,6 +32,11 @@ The runtime owns
   HugeCTR-style refresh clock for the whole deployment instead of one
   per engine. Refreshes are double-buffered tensor swaps, so they never
   recompile any engine's plans;
+* **online model updates**: ``push_update(model, row_ids, new_rows)``
+  routes trainer deltas to the named engine's versioned publish, and
+  ``attach_delta_stream`` + ``delta_every=N`` drains a
+  :class:`~repro.serving.updates.DeltaSource` on the same shared
+  admission clock (see ``docs/operations.md`` for staleness tuning);
 * **aggregated stats**: :func:`ServingRuntime.stats` merges the
   per-engine counters into one :class:`RuntimeStats` snapshot (totals +
   merged latency percentiles + per-model ``EngineStats``).
@@ -68,6 +73,14 @@ class RuntimeStats:
     ``engine.AGGREGATED_COUNTERS`` is a field here — :meth:`stats` sums
     them generically, and the import-time check below keeps the two
     definitions from drifting.
+
+    Online-update staleness: ``emb_delta_pushes``/``emb_delta_rows`` and
+    ``rows_behind`` sum across engines, while ``emb_version`` and
+    ``seconds_behind`` take the **max** — versions are per-engine
+    sequences (two A/B engines deliberately sit at different versions),
+    so the aggregate answers "how fresh is the deployment's most-updated
+    set / how stale is the worst engine", and ``per_model`` drills into
+    each engine's own version and gauges.
     """
     n_models: int
     n_requests: int
@@ -87,6 +100,11 @@ class RuntimeStats:
     emb_gather_bytes: int
     emb_quant_rows: int
     emb_quant_bytes_saved: int
+    emb_version: int
+    emb_delta_pushes: int
+    emb_delta_rows: int
+    rows_behind: int
+    seconds_behind: float
     mlp_quant_matmuls: int
     mlp_quant_weight_bytes: int
     mlp_quant_weight_bytes_saved: int
@@ -128,11 +146,21 @@ class ServingRuntime:
         pool_size: worker threads for the shared scheduler (ignored in
             ``"per-engine"`` mode or when a scheduler instance is
             passed).
+        delta_every: online-update cadence — pull every attached delta
+            stream (:meth:`attach_delta_stream`) once per N submitted
+            requests across models, applying pending trainer pushes in a
+            background thread off the intake hot path (same pattern as
+            the shared admission refresh). Deltas land through each
+            engine's versioned double-buffered publish, so cadence
+            trades staleness (``rows_behind``/``seconds_behind``)
+            against host-side scatter work only — never recompiles.
+            ``None`` disables; :meth:`pull_updates`/:meth:`push_update`
+            remain the manual surface.
     """
 
     def __init__(self, *, refresh_every: int | None = None, mesh=None,
                  scheduler: str | DeviceScheduler = "shared",
-                 pool_size: int = 2):
+                 pool_size: int = 2, delta_every: int | None = None):
         self._engines: dict[str, InferenceEngine] = {}
         self.refresh_every = refresh_every
         self.mesh = mesh
@@ -146,9 +174,12 @@ class ServingRuntime:
             raise ValueError(f"scheduler must be 'shared', 'per-engine' or "
                              f"a DeviceScheduler, got {scheduler!r}")
         self.pool_size = pool_size
+        self.delta_every = delta_every
         self._submitted = 0
         self._refreshing = False
         self._refresh_thread: threading.Thread | None = None
+        self._delta_pulling = False
+        self._delta_thread: threading.Thread | None = None
         self._admission_lock = threading.Lock()
 
     # -- registry ------------------------------------------------------------
@@ -213,10 +244,10 @@ class ServingRuntime:
     def stop(self, flush: bool = True) -> None:
         """Stop the shared pool and/or every worker; with ``flush``
         (default) force-drain the leftover queues so no future stays
-        unresolved. Joins any in-flight shared-admission refresh. Every
-        engine is stopped even if one raises; the first swallowed
-        background-drain error (``EngineStats.n_worker_errors``) is
-        re-raised at the end."""
+        unresolved. Joins any in-flight shared-admission refresh or
+        delta pull. Every engine is stopped even if one raises; the
+        first swallowed background-drain error
+        (``EngineStats.n_worker_errors``) is re-raised at the end."""
         if self._scheduler is not None:
             self._scheduler.stop()
         errors: list[BaseException] = []
@@ -227,8 +258,10 @@ class ServingRuntime:
                 errors.append(exc)
         with self._admission_lock:
             t, self._refresh_thread = self._refresh_thread, None
-        if t is not None and t.is_alive():
-            t.join()
+            d, self._delta_thread = self._delta_thread, None
+        for bg in (t, d):
+            if bg is not None and bg.is_alive():
+                bg.join()
         if errors:
             raise errors[0]
 
@@ -255,11 +288,27 @@ class ServingRuntime:
 
     # -- shared admission ----------------------------------------------------
     def _count_and_maybe_refresh(self, n: int) -> None:
-        if not self.refresh_every:
+        if not self.refresh_every and not self.delta_every:
             return
         with self._admission_lock:
             before = self._submitted
             self._submitted += n
+            if self.delta_every:
+                delta_crossed = (self._submitted // self.delta_every
+                                 > before // self.delta_every)
+                if delta_crossed and not self._delta_pulling:
+                    # same off-hot-path rules as the refresh thread below:
+                    # non-daemon, registered under the lock, joined in
+                    # stop(). Deltas publish through each engine's
+                    # versioned double-buffered swap — a short lag between
+                    # crossing and publish only shows up as staleness.
+                    self._delta_pulling = True
+                    d = threading.Thread(target=self._pull_in_background,
+                                         name="runtime-delta-pull")
+                    self._delta_thread = d
+                    d.start()
+            if not self.refresh_every:
+                return
             crossed = (self._submitted // self.refresh_every
                        > before // self.refresh_every)
             if crossed and not self._refreshing:
@@ -295,21 +344,61 @@ class ServingRuntime:
                 n += 1
         return n
 
+    # -- online model updates ------------------------------------------------
+    def push_update(self, model: str, row_ids, new_rows) -> int:
+        """Apply one delta batch to ``model``'s engine (see
+        :meth:`InferenceEngine.push_update`): the store scatters the new
+        rows into backing + cache (+ staging), the engine publishes the
+        fresh subtree in one swap and stamps the next ``emb_version`` —
+        in-flight plans keep serving throughout, nothing recompiles.
+        Returns rows applied (after dedupe)."""
+        return self.engine(model).push_update(row_ids, new_rows)
+
+    def attach_delta_stream(self, model: str, source) -> None:
+        """Attach a :class:`~repro.serving.updates.DeltaSource` to
+        ``model``'s engine. Drained by :meth:`pull_updates` or, with
+        ``delta_every=N``, automatically once per N submitted requests;
+        its backlog feeds the engine's ``rows_behind`` /
+        ``seconds_behind`` gauges either way."""
+        self.engine(model).attach_delta_source(source)
+
+    def pull_updates(self, max_batches: int | None = None) -> int:
+        """Drain every attached delta stream now (up to ``max_batches``
+        per engine); returns total rows applied across models."""
+        return sum(eng.pull_updates(max_batches=max_batches)
+                   for eng in self._engines.values())
+
+    def _pull_in_background(self) -> None:
+        try:
+            self.pull_updates()
+        finally:
+            with self._admission_lock:
+                self._delta_pulling = False
+
     # -- stats ---------------------------------------------------------------
     def stats(self) -> RuntimeStats:
         """Aggregate snapshot across engines (see :class:`RuntimeStats`)."""
         lat: list[float] = []
         tot = {name: 0 for name in AGGREGATED_COUNTERS}
+        # max-aggregated gauges (see the RuntimeStats docstring): summing
+        # per-engine version sequences or queue ages is meaningless.
+        emb_version = 0
+        seconds_behind = 0.0
         for eng in self._engines.values():
+            eng.poll_staleness()       # gauges reflect the backlog *now*
             st = eng.stats
             with st.lock:
                 lat.extend(st.latency_ms)
                 for name in AGGREGATED_COUNTERS:
                     tot[name] += getattr(st, name)
+                emb_version = max(emb_version, st.emb_version)
+                seconds_behind = max(seconds_behind, st.seconds_behind)
         return RuntimeStats(
             n_models=len(self._engines),
             p50_ms=float(np.percentile(lat, 50)) if lat else 0.0,
             p99_ms=float(np.percentile(lat, 99)) if lat else 0.0,
+            emb_version=emb_version,
+            seconds_behind=seconds_behind,
             per_model={n: e.stats.snapshot()
                        for n, e in self._engines.items()},
             **tot)

@@ -1,0 +1,163 @@
+"""Docs are executable: every fenced Python snippet in README.md and
+``docs/*.md`` runs green, top to bottom, and every relative link (and
+used anchor) resolves.
+
+Contract:
+
+* Each file's ``python`` fences execute sequentially in one shared
+  namespace — later snippets may use names an earlier snippet defined,
+  exactly as a reader following the page would.
+* An HTML comment directly above a fence controls execution:
+  ``<!-- docs-test: skip -->`` skips the block;
+  ``<!-- docs-test: requires-devices=8 -->`` skips it unless
+  ``jax.device_count()`` is at least that (the tier1-mesh CI job
+  provides 8 simulated devices, so mesh snippets still execute there).
+* Non-Python fences (``bash``, ASCII diagrams, JSON) are ignored.
+* Snippets run with the repo root as cwd (some read committed files,
+  e.g. ``BENCH_serving.json``).
+
+A snippet that stops compiling or an API drift that breaks an example
+fails this test — stale documentation is a CI failure, not a review
+hope.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import re
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+DOC_FILES = ["README.md"] + sorted(
+    str(p.relative_to(REPO)) for p in (REPO / "docs").glob("*.md"))
+
+_MARKER = re.compile(r"<!--\s*docs-test:\s*(.+?)\s*-->")
+
+
+@dataclasses.dataclass
+class Block:
+    path: str
+    lineno: int            # 1-based line of the opening fence
+    code: str
+    skip: bool = False
+    requires_devices: int = 0
+
+
+def extract_blocks(relpath: str) -> list[Block]:
+    lines = (REPO / relpath).read_text().splitlines()
+    blocks: list[Block] = []
+    in_fence = False
+    fence_lang = ""
+    buf: list[str] = []
+    start = 0
+    for i, line in enumerate(lines, 1):
+        stripped = line.strip()
+        if not in_fence and stripped.startswith("```"):
+            in_fence, fence_lang, buf, start = True, stripped[3:].strip(), [], i
+        elif in_fence and stripped == "```":
+            in_fence = False
+            if fence_lang == "python":
+                b = Block(relpath, start, "\n".join(buf) + "\n")
+                # markers sit on the non-blank lines directly above
+                j = start - 2
+                while j >= 0 and (not lines[j].strip()
+                                  or _MARKER.search(lines[j])):
+                    m = _MARKER.search(lines[j])
+                    if m:
+                        directive = m.group(1)
+                        if directive == "skip":
+                            b.skip = True
+                        elif directive.startswith("requires-devices="):
+                            b.requires_devices = int(directive.split("=")[1])
+                        else:
+                            raise ValueError(
+                                f"{relpath}:{j + 1}: unknown docs-test "
+                                f"directive {directive!r}")
+                    j -= 1
+                blocks.append(b)
+        elif in_fence:
+            buf.append(line)
+    assert not in_fence, f"{relpath}: unclosed code fence at line {start}"
+    return blocks
+
+
+@pytest.mark.parametrize("relpath", DOC_FILES)
+def test_doc_snippets_execute(relpath):
+    blocks = extract_blocks(relpath)
+    assert blocks, f"{relpath} documents an executable API but has no " \
+                   "python snippets"
+    import jax
+    ns: dict = {"__name__": f"docs_{Path(relpath).stem}"}
+    old_cwd = os.getcwd()
+    os.chdir(REPO)
+    try:
+        for b in blocks:
+            if b.skip:
+                continue
+            if b.requires_devices and jax.device_count() < b.requires_devices:
+                continue
+            code = compile(b.code, f"{relpath}:{b.lineno}", "exec")
+            exec(code, ns)      # noqa: S102 — executing our own docs is the point
+    finally:
+        os.chdir(old_cwd)
+
+
+# --- links and anchors -------------------------------------------------------
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def _headings(relpath: Path) -> set[str]:
+    """GitHub-style anchor slugs of every markdown heading in the file."""
+    slugs = set()
+    in_fence = False
+    for line in relpath.read_text().splitlines():
+        if line.strip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        if in_fence or not line.startswith("#"):
+            continue
+        text = line.lstrip("#").strip()
+        text = re.sub(r"`([^`]*)`", r"\1", text)        # drop code spans
+        slug = re.sub(r"[^\w\- ]", "", text.lower()).replace(" ", "-")
+        slugs.add(slug)
+    return slugs
+
+
+@pytest.mark.parametrize("relpath", DOC_FILES)
+def test_doc_links_resolve(relpath):
+    """Every relative link points at a real file, and every used anchor
+    at a real heading — dead pointers (deleted files, renamed sections)
+    fail here instead of rotting."""
+    src = REPO / relpath
+    problems = []
+    in_fence = False
+    for i, line in enumerate(src.read_text().splitlines(), 1):
+        if line.strip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for target in _LINK.findall(line):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path_part, _, anchor = target.partition("#")
+            dest = (src.parent / path_part).resolve() if path_part else src
+            if not dest.exists():
+                problems.append(f"{relpath}:{i}: broken link {target!r}")
+                continue
+            if anchor and dest.suffix == ".md" \
+                    and anchor not in _headings(dest):
+                problems.append(f"{relpath}:{i}: dead anchor {target!r}")
+    assert not problems, "\n".join(problems)
+
+
+def test_every_doc_page_is_linked_from_readme():
+    """docs/ pages that nothing references are unreachable documentation."""
+    readme = (REPO / "README.md").read_text()
+    for page in (REPO / "docs").glob("*.md"):
+        assert f"docs/{page.name}" in readme, \
+            f"docs/{page.name} is not linked from README.md"
